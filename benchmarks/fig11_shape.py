@@ -1,0 +1,64 @@
+"""Fig 11: Shape-axis isolation on MnasNet (1024 PEs, K-C parallelism).
+
+Paper reference: PartFlex-0001-B (4x4 building block) nearly matches
+FullFlex-0001 with ~6% of the shape flexibility; InFlex is a 32x32 square.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (FULLFLEX, PARTFLEX, ShapeSpec, compute_flexion,
+                        get_model, make_variant, search, search_model)
+
+from .common import Table, find_layer, ga_budget
+
+# expansion / projection layers with skewed (K, C) the paper highlights
+LAYERS = {
+    "expand_72x24": (72, 24, 56, 56, 1, 1),
+    "expand_120x40": (120, 40, 28, 28, 1, 1),
+    "project_80x480": (80, 480, 14, 14, 1, 1),
+}
+
+
+def _accels():
+    kw = dict(fixed_shape=(32, 32))
+    a = [("InFlex0001", make_variant("0000", **kw))]
+    pa = make_variant("0001", PARTFLEX, **kw)
+    pa = dataclasses.replace(pa, name="PartFlex0001A", shape=dataclasses
+                             .replace(pa.shape, building_block=16))
+    pb = make_variant("0001", PARTFLEX, **kw)
+    pb = dataclasses.replace(pb, name="PartFlex0001B", shape=dataclasses
+                             .replace(pb.shape, building_block=4))
+    a += [("PartFlex0001A", pa), ("PartFlex0001B", pb),
+          ("FullFlex0001", make_variant("0001", FULLFLEX, **kw)),
+          ("FullFlex1111", make_variant("1111", FULLFLEX, **kw))]
+    return a
+
+
+def run(print_fn=print):
+    layers = get_model("mnasnet")
+    cfg = ga_budget()
+    accels = _accels()
+    t = Table("Fig 11 — Shape axis isolation (MnasNet, 1024 PEs)",
+              ["accel", "layer", "runtime_rel", "H-F(S)", "chosen_shape"])
+    for lname, dims in LAYERS.items():
+        layer = find_layer("mnasnet", dims)
+        base = None
+        for aname, spec in accels:
+            r = search(layer, spec, cfg)
+            base = base or r
+            fx = compute_flexion(spec, layer, mc_samples=2_000)
+            t.add(aname, lname, r.runtime / base.runtime,
+                  fx.per_axis_hf["S"], f"{r.mapping.shape}")
+    model_rt = {}
+    for aname, spec in accels:
+        res = search_model(layers, spec, cfg)
+        model_rt[aname] = res.runtime
+        t.add(aname, "model", model_rt[aname] / model_rt["InFlex0001"],
+              "-", "-")
+    t.show(print_fn)
+    return {
+        "fullflex_speedup": model_rt["InFlex0001"] / model_rt["FullFlex0001"],
+        "partflexB_close_to_full": model_rt["PartFlex0001B"]
+        <= 1.15 * model_rt["FullFlex0001"],
+    }

@@ -1,0 +1,49 @@
+"""Fig 13 / Sec 7: future-proofing a 2014 AlexNet-optimized accelerator.
+
+Rows: InFlex-0000-Alexnet-Opt (the hardened 2014 design), InFlex-0000-X-Opt
+(re-designed per future model), and flexible variants of the 2014 design.
+Values: runtime normalized to the 2014 design per model.  Paper headline:
+FullFlex-1111 gains 11.8x geomean on future DNNs.
+"""
+from __future__ import annotations
+
+import os
+
+from repro.core import future_proofing_study, geomean_speedup
+
+from .common import Table, ga_budget
+
+FULL = os.environ.get("REPRO_BENCH_MODE", "default") == "full"
+
+CLASSES_DEFAULT = ("1000", "0100", "0010", "0001", "0011", "1100", "1111")
+CLASSES_FULL = ("1000", "0100", "0010", "0001", "0011", "0101", "1001",
+                "0110", "1010", "1100", "1110", "1011", "0111", "1101",
+                "1111")
+
+
+def run(print_fn=print):
+    cfg = ga_budget(scale=0.5)
+    models = ("alexnet", "mnasnet", "resnet50", "mobilenetv2", "bert",
+              "dlrm", "ncf")
+    table = future_proofing_study(
+        base_model="alexnet", future_models=models,
+        class_strs=CLASSES_FULL if FULL else CLASSES_DEFAULT, cfg=cfg)
+
+    t = Table("Fig 13 — runtime normalized to InFlex0000-Alexnet-Opt",
+              ["accel"] + list(models) + ["geomean_speedup"])
+    derived = {}
+    for row_name, cols in table.items():
+        gm = geomean_speedup(table, row_name)
+        t.add(row_name, *[round(cols[m], 4) for m in models], round(gm, 2))
+        derived[row_name] = gm
+    t.show(print_fn)
+
+    full_row = next(r for r in table if r.startswith("FullFlex1111"))
+    future = [m for m in models if m != "alexnet"]
+    return {
+        "fullflex1111_geomean_future": geomean_speedup(table, full_row,
+                                                       future),
+        "fullflex1111_geomean_all": derived.get(full_row, float("nan")),
+        "beats_inflex_everywhere": all(
+            table[full_row][m] <= 1.001 for m in models),
+    }

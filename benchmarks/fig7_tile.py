@@ -1,0 +1,64 @@
+"""Fig 7: Tile-axis isolation on MnasNet (InFlex/PartFlex/FullFlex-1000 and
+FullFlex-1111), with H-F / W-F flexion quantification.
+
+Paper reference points: PartFlex-1000 H-F ~0.22 (1:1:1 hard partition);
+FullFlex-1000 ~4.8x over InFlex end-to-end; PartFlex strictly between.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core import (FULLFLEX, PARTFLEX, compute_flexion, get_model,
+                        inflex_baseline, make_variant, search, search_model)
+
+from .common import MNASNET_LAYERS, Table, find_layer, ga_budget
+
+
+def run(print_fn=print):
+    layers = get_model("mnasnet")
+    cfg = ga_budget()
+    accels = [
+        ("InFlex1000", inflex_baseline()),
+        ("PartFlex1000", make_variant("1000", PARTFLEX)),
+        ("FullFlex1000", make_variant("1000", FULLFLEX)),
+        ("FullFlex1111", make_variant("1111", FULLFLEX)),
+    ]
+
+    t = Table("Fig 7 — Tile axis isolation (MnasNet)",
+              ["accel", "layer", "runtime_rel", "energy_rel", "edp_rel",
+               "H-F(T)", "W-F(T)", "chosen_tile"])
+    base_by_layer = {}
+    derived = {}
+    for lname, dims in [("layer1", MNASNET_LAYERS["layer1"]),
+                        ("layer16", MNASNET_LAYERS["layer16"]),
+                        ("layer29", MNASNET_LAYERS["layer29"])]:
+        layer = find_layer("mnasnet", dims)
+        for aname, spec in accels:
+            r = search(layer, spec, cfg)
+            if aname == "InFlex1000":
+                base_by_layer[lname] = r
+            b = base_by_layer[lname]
+            fx = compute_flexion(spec, layer, mc_samples=20_000)
+            t.add(aname, lname, r.runtime / b.runtime, r.energy / b.energy,
+                  r.edp / b.edp, fx.per_axis_hf["T"], fx.per_axis_wf["T"],
+                  str(r.mapping.tiles))
+
+    # end-to-end model
+    model_rt = {}
+    for aname, spec in accels:
+        res = search_model(layers, spec, cfg)
+        model_rt[aname] = res.runtime
+        t.add(aname, "model", res.runtime / model_rt["InFlex1000"],
+              res.energy, "-", "-", "-", "-")
+    t.show(print_fn)
+
+    derived["fullflex1000_speedup"] = (model_rt["InFlex1000"]
+                                       / model_rt["FullFlex1000"])
+    derived["partflex1000_speedup"] = (model_rt["InFlex1000"]
+                                       / model_rt["PartFlex1000"])
+    derived["ordering_ok"] = (model_rt["FullFlex1111"]
+                              <= model_rt["FullFlex1000"]
+                              <= model_rt["PartFlex1000"] * 1.001
+                              and model_rt["PartFlex1000"]
+                              <= model_rt["InFlex1000"] * 1.001)
+    return derived

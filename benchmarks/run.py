@@ -1,0 +1,66 @@
+"""Benchmark runner — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV at the end (us_per_call = wall time
+of the whole table/figure reproduction; derived = its headline metric).
+
+  PYTHONPATH=src python -m benchmarks.run                 # everything
+  PYTHONPATH=src python -m benchmarks.run table3 fig7     # a subset
+  REPRO_BENCH_MODE=fast|default|full                      # GA budgets
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+import time
+import traceback
+
+from . import (bridge_validation, fig7_tile, fig8_buffer, fig9_order,
+               fig10_parallelism, fig11_shape, fig12_arraysize,
+               fig13_futureproof, roofline, table3_area)
+
+BENCHES = {
+    "table3": (table3_area, "fullflex_overhead_pct"),
+    "fig7": (fig7_tile, "fullflex1000_speedup"),
+    "fig8": (fig8_buffer, "speedup_1k_to_64k"),
+    "fig9": (fig9_order, "fullflex0100_speedup"),
+    "fig10": (fig10_parallelism, "fullflex_speedup_16x64"),
+    "fig11": (fig11_shape, "fullflex_speedup"),
+    "fig12": (fig12_arraysize, "speedup_256_to_1024"),
+    "fig13": (fig13_futureproof, "fullflex1111_geomean_future"),
+    "roofline": (roofline, "cells_ok"),
+    "bridge": (bridge_validation, "long_decode_speedup"),
+}
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    names = [a for a in argv if a in BENCHES] or list(BENCHES)
+    csv_rows = []
+    results = {}
+    failed = 0
+    for name in names:
+        mod, headline = BENCHES[name]
+        t0 = time.time()
+        try:
+            derived = mod.run()
+            results[name] = derived
+            dt_us = (time.time() - t0) * 1e6
+            csv_rows.append((name, dt_us, derived.get(headline)))
+        except Exception as e:  # noqa: BLE001
+            failed += 1
+            traceback.print_exc()
+            csv_rows.append((name, (time.time() - t0) * 1e6,
+                             f"ERROR:{type(e).__name__}"))
+    os.makedirs("results", exist_ok=True)
+    with open("results/bench_results.json", "w") as f:
+        json.dump(results, f, indent=2, default=str)
+
+    print("\nname,us_per_call,derived")
+    for name, us, derived in csv_rows:
+        print(f"{name},{us:.0f},{derived}")
+    return 1 if failed else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

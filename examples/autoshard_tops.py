@@ -1,0 +1,22 @@
+"""Beyond-paper: the TOPS formalism applied to the TPU pod itself.
+
+The paper's axes map onto distributed-training knobs (DESIGN.md §3):
+S = logical mesh shape, P = sharding rules, T = microbatch/block sizes,
+O = scan order / stationarity.  This example runs the same constrained-GA
+DSE over *mesh shapes x sharding choices* for one assigned architecture,
+scoring candidates with the chip-level roofline model — i.e. the paper's
+flexibility-aware DSE reused as an auto-sharding tool.
+
+Run:  PYTHONPATH=src python examples/autoshard_tops.py --arch gemma-2b
+"""
+import argparse
+
+from repro.core.tops_bridge import autoshard_report
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--chips", type=int, default=256)
+    args = ap.parse_args()
+    autoshard_report(args.arch, args.shape, n_chips=args.chips)

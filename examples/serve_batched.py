@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests: wave-scheduled prefill +
+lockstep decode with per-slot early stop (see repro/serve/engine.py).
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import run_serving
+
+if __name__ == "__main__":
+    run_serving("gemma-2b", smoke=True, n_requests=12, max_new=24,
+                max_batch=4)

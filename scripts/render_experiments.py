@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md sections from results/*.jsonl artifacts.
+
+  PYTHONPATH=src python scripts/render_experiments.py > /tmp/sections.md
+
+Emits §Dry-run and §Roofline markdown tables from results/dryrun.jsonl and
+the §Perf iteration table from results/perf_iters.jsonl (if present).
+"""
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def load(path):
+    if not os.path.exists(path):
+        return []
+    recs = {}
+    for line in open(path):
+        line = line.strip()
+        if not line:
+            continue
+        r = json.loads(line)
+        key = (r["arch"], r["shape"], r["mesh"], r.get("tag", ""))
+        recs[key] = r
+    return list(recs.values())
+
+
+def gb(x):
+    return f"{(x or 0) / 1e9:.2f}"
+
+
+def main():
+    recs = load("results/dryrun.jsonl")
+    base = [r for r in recs if not r.get("tag")]
+    single = sorted([r for r in base if r["mesh"] == "16x16"],
+                    key=lambda r: (r["arch"], r["shape"]))
+    multi = sorted([r for r in base if r["mesh"] == "2x16x16"],
+                   key=lambda r: (r["arch"], r["shape"]))
+
+    print("### Dry-run table (single-pod 16x16 = 256 chips)\n")
+    print("| arch | shape | status | compile_s | args GB/dev | temp GB/dev |"
+          " HLO GFLOP/dev | HLO GB/dev | collective GB/dev |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | SKIP (full-attention "
+                  f"@500k) | - | - | - | - | - | - |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - | - |"
+                  f" - | - |")
+            continue
+        m = r["memory"]
+        pd = r.get("per_device", {})
+        coll = pd.get("collectives", {}).get("total", 0)
+        print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} "
+              f"| {gb(m['argument_bytes'])} | {gb(m['temp_bytes'])} "
+              f"| {pd.get('flops', 0) / 1e9:.1f} "
+              f"| {gb(pd.get('hbm_bytes'))} | {gb(coll)} |")
+
+    print("\n### Multi-pod proof (2x16x16 = 512 chips, compile + memory)\n")
+    print("| arch | shape | status | compile_s | args GB/dev |"
+          " temp GB/dev |")
+    print("|---|---|---|---|---|---|")
+    for r in multi:
+        if r["status"] == "skipped":
+            print(f"| {r['arch']} | {r['shape']} | SKIP | - | - | - |")
+        elif r["status"] != "ok":
+            print(f"| {r['arch']} | {r['shape']} | ERROR | - | - | - |")
+        else:
+            m = r["memory"]
+            print(f"| {r['arch']} | {r['shape']} | ok | {r['compile_s']} "
+                  f"| {gb(m['argument_bytes'])} | {gb(m['temp_bytes'])} |")
+
+    print("\n### Roofline terms (single-pod, per device; TPU v5e "
+          "197 TF/s bf16, 819 GB/s HBM, 4x50 GB/s ICI)\n")
+    print("| arch | shape | compute ms | memory ms | collective ms |"
+          " dominant | roofline fraction | MODEL/HLO FLOPs |")
+    print("|---|---|---|---|---|---|---|---|")
+    for r in single:
+        if r["status"] != "ok" or "roofline" not in r:
+            continue
+        t = r["roofline"]
+        print(f"| {r['arch']} | {r['shape']} "
+              f"| {t['compute_s']*1e3:.2f} | {t['memory_s']*1e3:.2f} "
+              f"| {t['collective_s']*1e3:.2f} | {t['dominant']} "
+              f"| {t['roofline_fraction']:.3f} "
+              f"| {r.get('useful_compute_fraction', 0):.3f} |")
+
+    # perf iterations (tagged records)
+    tagged = [r for r in recs if r.get("tag")]
+    if tagged:
+        print("\n### Perf iteration records (tagged variants)\n")
+        print("| tag | arch | shape | mesh | compute ms | memory ms |"
+              " collective ms | dominant | temp GB |")
+        print("|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(tagged, key=lambda r: r["tag"]):
+            if r["status"] != "ok":
+                print(f"| {r['tag']} | {r['arch']} | {r['shape']} "
+                      f"| {r['mesh']} | ERROR | | | | |")
+                continue
+            t = r.get("roofline", {})
+            m = r["memory"]
+            print(f"| {r['tag']} | {r['arch']} | {r['shape']} | {r['mesh']} "
+                  f"| {t.get('compute_s', 0)*1e3:.2f} "
+                  f"| {t.get('memory_s', 0)*1e3:.2f} "
+                  f"| {t.get('collective_s', 0)*1e3:.2f} "
+                  f"| {t.get('dominant', '-')} | {gb(m['temp_bytes'])} |")
+
+
+if __name__ == "__main__":
+    main()

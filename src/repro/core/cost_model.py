@@ -1,0 +1,221 @@
+"""Analytical accelerator cost model (MAESTRO/Timeloop-style), fully
+vectorizable with ``jax.vmap`` so a whole GA population evaluates in one jit.
+
+Hierarchy modelled (paper Fig 1/Fig 4): DRAM -> L2 global buffer -> PE array.
+A *mapping* is (T, O, P, S):
+
+  T : L2 tile sizes (t_K, t_C, t_Y, t_X, t_R, t_S)
+  O : permutation of the 6 loops (outermost first) for the DRAM->L2 loops,
+      reused intra-tile for PE-level stationarity
+  P : ordered pair of dims spatially mapped to (rows, cols)
+  S : logical array shape (rows, cols), rows*cols <= num_PEs
+
+Loop-nest reuse analysis: a tensor with dependency set D must be re-fetched
+once per iteration of every loop at or outside its innermost dependent loop;
+loops strictly inside give free temporal reuse (the "stationary" window).
+
+Runtime = max(compute, DRAM, L2) cycles (double-buffered) + tile-switch
+stalls (systolic refill, paper Fig 3a).  Energy = per-access energies times
+traffic at each level plus MAC energy.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .spec import HWConfig
+from .workloads import C, K, NUM_DIMS, R, S, X, Y
+
+BIG = jnp.float32(1e30)
+
+# Dependency masks over (K, C, Y, X, R, S); depthwise swaps K-dependence for C.
+_DEP_IN = np.array([0, 1, 1, 1, 1, 1], np.bool_)       # input
+_DEP_W = np.array([1, 1, 0, 0, 1, 1], np.bool_)        # weight
+_DEP_O = np.array([1, 0, 1, 1, 0, 0], np.bool_)        # output
+_DEP_W_DW = np.array([0, 1, 0, 0, 1, 1], np.bool_)     # depthwise weight
+_DEP_O_DW = np.array([0, 1, 1, 1, 0, 0], np.bool_)     # depthwise output
+
+
+class CostResult(NamedTuple):
+    runtime: jnp.ndarray       # cycles
+    energy: jnp.ndarray        # relative pJ (MAC = 1)
+    feasible: jnp.ndarray      # bool
+    util: jnp.ndarray          # average PE utilization in [0, 1]
+    dram_elems: jnp.ndarray    # total DRAM traffic (elements)
+    l2_elems: jnp.ndarray      # total L2 traffic (elements)
+    edp: jnp.ndarray           # energy-delay product
+
+
+def _ceil_div(a, b):
+    return (a + b - 1) // b
+
+
+def _reuse_multiplier(order: jnp.ndarray, trips: jnp.ndarray,
+                      dep: jnp.ndarray) -> jnp.ndarray:
+    """prod of trip counts of loops at-or-outside the innermost dependent loop.
+
+    order: (6,) dim index per position (0 = outermost)
+    trips: (6,) per-dim trip count
+    dep:   (6,) per-dim bool dependency
+    """
+    dep_in_order = dep[order]                       # (6,) by position
+    pos = jnp.arange(NUM_DIMS)
+    # innermost position whose dim is relevant AND actually iterates (>1 trips)
+    trips_in_order = trips[order]
+    relevant = dep_in_order & (trips_in_order > 1)
+    p_last = jnp.max(jnp.where(relevant, pos, -1))
+    mult = jnp.prod(jnp.where(pos <= p_last, trips_in_order, 1))
+    return jnp.maximum(mult, 1)
+
+
+def _stationary_reuse(order: jnp.ndarray, tile: jnp.ndarray,
+                      dep: jnp.ndarray, cap: float = 64.0) -> jnp.ndarray:
+    """Temporal reuse of a tensor inside the PE (L1) = product of tile sizes of
+    loops strictly inside its innermost dependent loop, capped by register
+    capacity.  This is what the O axis buys at the L2-access level."""
+    dep_in_order = dep[order]
+    pos = jnp.arange(NUM_DIMS)
+    tile_in_order = tile[order]
+    relevant = dep_in_order & (tile_in_order > 1)
+    p_last = jnp.max(jnp.where(relevant, pos, -1))
+    reuse = jnp.prod(jnp.where(pos > p_last, tile_in_order, 1))
+    return jnp.clip(reuse, 1.0, cap)
+
+
+@partial(jax.jit, static_argnames=("hw", "hard_partition"))
+def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
+                     depthwise: jnp.ndarray,
+                     tiles: jnp.ndarray, order: jnp.ndarray,
+                     par: jnp.ndarray, shape_rc: jnp.ndarray,
+                     hw: HWConfig, hard_partition: bool = False
+                     ) -> CostResult:
+    """Cost one mapping of one layer.  All args are arrays => vmap-friendly.
+
+    dims: (6,) int   layer (K, C, Y, X, R, S)
+    stride: () int   conv stride
+    depthwise: () bool
+    tiles: (6,) int  L2 tile sizes (clipped to dims)
+    order: (6,) int  permutation, outermost first
+    par:   (2,) int  dims mapped to (rows, cols)
+    shape_rc: (2,) int  (rows, cols)
+    """
+    dims = dims.astype(jnp.float32)
+    t = jnp.clip(tiles.astype(jnp.float32), 1.0, dims)
+    rows = shape_rc[0].astype(jnp.float32)
+    cols = shape_rc[1].astype(jnp.float32)
+    stride = stride.astype(jnp.float32)
+
+    dep_w = jnp.where(depthwise, jnp.asarray(_DEP_W_DW), jnp.asarray(_DEP_W))
+    dep_o = jnp.where(depthwise, jnp.asarray(_DEP_O_DW), jnp.asarray(_DEP_O))
+    dep_i = jnp.asarray(_DEP_IN)
+
+    # ---- tile volumes (elements) ------------------------------------------
+    in_y = (t[Y] - 1.0) * stride + t[R]
+    in_x = (t[X] - 1.0) * stride + t[S]
+    vol_in = t[C] * in_y * in_x
+    vol_w = jnp.where(depthwise, 1.0, t[K]) * t[C] * t[R] * t[S]
+    vol_out = jnp.where(depthwise, t[C], t[K]) * t[Y] * t[X]
+
+    buf = jnp.float32(hw.buffer_elems)
+    if hard_partition:
+        cap = buf / 3.0
+        fits = (vol_in <= cap) & (vol_w <= cap) & (vol_out <= cap)
+    else:
+        fits = (vol_in + vol_w + vol_out) <= buf
+
+    # parallel dims must be distinct and the array must exist
+    par_ok = (par[0] != par[1]) & (rows >= 1) & (cols >= 1) \
+        & (rows * cols <= hw.num_pes)
+    feasible = fits & par_ok
+
+    # ---- trip counts & compute --------------------------------------------
+    trips = _ceil_div(dims, t)                      # (6,) DRAM-level loops
+    num_tiles = jnp.prod(trips)
+    tile_macs = jnp.prod(t) / jnp.where(depthwise, t[K], 1.0)
+    total_macs = num_tiles * tile_macs              # padded (folded) MACs
+
+    tp1 = t[par[0]]
+    tp2 = t[par[1]]
+    folds = _ceil_div(tp1, rows) * _ceil_div(tp2, cols)
+    serial_iters = folds * tile_macs / (tp1 * tp2)  # cycles per tile
+    compute_cycles = num_tiles * serial_iters
+    active = jnp.minimum(tp1, rows) * jnp.minimum(tp2, cols)
+    # average utilization incl. folding remainder
+    ideal_cycles = num_tiles * tile_macs / (rows * cols)
+    util = ideal_cycles / jnp.maximum(compute_cycles, 1.0)
+
+    # ---- DRAM traffic via loop-nest reuse ---------------------------------
+    dram_in = vol_in * _reuse_multiplier(order, trips, dep_i)
+    dram_w = vol_w * _reuse_multiplier(order, trips, dep_w)
+    out_mult = _reuse_multiplier(order, trips, dep_o)
+    distinct_out = jnp.prod(jnp.where(dep_o, trips, 1))
+    psum_revisits = jnp.maximum(out_mult - distinct_out, 0.0)
+    dram_out = vol_out * (distinct_out + 2.0 * psum_revisits)
+    dram_elems = dram_in + dram_w + dram_out
+    dram_cycles = dram_elems / hw.dram_bw
+
+    # ---- L2 traffic: spatial multicast + PE-level stationarity ------------
+    def mcast(dep):
+        f1 = jnp.where(dep[par[0]], 1.0, jnp.minimum(tp1, rows))
+        f2 = jnp.where(dep[par[1]], 1.0, jnp.minimum(tp2, cols))
+        return f1 * f2
+
+    l2_in = total_macs / (mcast(dep_i) * _stationary_reuse(order, t, dep_i))
+    l2_w = total_macs / (mcast(dep_w) * _stationary_reuse(order, t, dep_w))
+    l2_out = total_macs / (mcast(dep_o) * _stationary_reuse(order, t, dep_o))
+    l2_elems = l2_in + l2_w + l2_out
+    l2_cycles = l2_elems / hw.l2_bw
+
+    # ---- stalls: stationary-tile switch == systolic refill (Fig 3a) -------
+    # refill depth follows the *active* extent of the array (idle rows/cols
+    # are clock-gated and do not lengthen the pipeline)
+    stalls = (num_tiles - 1.0) * (jnp.minimum(tp1, rows)
+                                  + jnp.minimum(tp2, cols))
+
+    runtime = jnp.maximum(jnp.maximum(compute_cycles, dram_cycles),
+                          l2_cycles) + stalls
+    runtime = jnp.where(feasible, runtime, BIG)
+
+    # ---- energy ------------------------------------------------------------
+    l1_accesses = 3.0 * total_macs
+    energy = (dram_elems * hw.e_dram + l2_elems * hw.e_l2
+              + l1_accesses * hw.e_l1 + total_macs * hw.e_mac)
+    energy = jnp.where(feasible, energy, BIG)
+
+    return CostResult(
+        runtime=runtime, energy=energy, feasible=feasible,
+        util=jnp.where(feasible, util, 0.0),
+        dram_elems=dram_elems, l2_elems=l2_elems,
+        edp=jnp.where(feasible, runtime * energy, BIG),
+    )
+
+
+@partial(jax.jit, static_argnames=("hw", "hard_partition"))
+def evaluate_population(dims: jnp.ndarray, stride: jnp.ndarray,
+                        depthwise: jnp.ndarray,
+                        tiles: jnp.ndarray, order: jnp.ndarray,
+                        par: jnp.ndarray, shape_rc: jnp.ndarray,
+                        hw: HWConfig, hard_partition: bool = False
+                        ) -> CostResult:
+    """vmap of evaluate_mapping over a (P, ...) population of mappings."""
+
+    def one(t_, o_, p_, s_):
+        return evaluate_mapping(dims, stride, depthwise, t_, o_, p_, s_,
+                                hw, hard_partition)
+
+    return jax.vmap(one)(tiles, order, par, shape_rc)
+
+
+def lower_bound_cycles(dims: np.ndarray, depthwise: bool,
+                       hw: HWConfig) -> float:
+    """Roofline lower bound: max(compute at full PE util, min DRAM traffic)."""
+    k, c, y, x, r, s = [float(v) for v in dims]
+    macs = (c if depthwise else k * c) * y * x * r * s
+    in_elems = c * y * x          # >= one read of each input element
+    w_elems = (1 if depthwise else k) * c * r * s
+    o_elems = (c if depthwise else k) * y * x
+    return max(macs / hw.num_pes, (in_elems + w_elems + o_elems) / hw.dram_bw)

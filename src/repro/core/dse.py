@@ -1,0 +1,194 @@
+"""Flexibility-aware Design-Space Exploration (paper Fig 6).
+
+Toolflow: (DNN model description, baseline HW resources, HW flexibility
+specification) -> selects the map space -> internal MSE (GA) -> best design
+point + HW performance (runtime, energy, area, power).
+
+Also implements the Sec 7 "future-proofing" workflow:
+  1. design InFlex-0000-<model>-Opt: one TOPS config optimized for a model,
+  2. derive flexible variants that keep the frozen config on inflexible axes
+     but open chosen axes (FullFlex/PartFlex-xxxx-<model>-Opt),
+  3. replay all variants on "future" models.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import area_model
+from .flexion import FlexionReport, model_flexion
+from .mapper import (GAConfig, ModelResult, evaluate_fixed_genome,
+                     search_fixed_config, search_model)
+from .mapspace import MapSpace
+from .spec import (FULLFLEX, INFLEX, PARTFLEX, FlexSpec, HWConfig, OrderSpec,
+                   ParallelSpec, ShapeSpec, TileSpec, perm_to_order_str)
+from .workloads import DIMS, Layer, get_model
+
+
+@dataclasses.dataclass
+class DSEResult:
+    spec_name: str
+    class_str: str
+    runtime: float
+    energy: float
+    edp: float
+    area: float
+    power: float
+    flexion: Optional[FlexionReport]
+    model_result: ModelResult
+
+    def row(self) -> Dict[str, float]:
+        return dict(name=self.spec_name, cls=self.class_str,
+                    runtime=self.runtime, energy=self.energy, edp=self.edp,
+                    area=self.area, power=self.power,
+                    hf=self.flexion.hf if self.flexion else float("nan"),
+                    wf=self.flexion.wf if self.flexion else float("nan"))
+
+
+def run_dse(layers: Sequence[Layer], candidates: Sequence[FlexSpec],
+            cfg: Optional[GAConfig] = None, with_flexion: bool = False,
+            flexion_samples: int = 20_000) -> List[DSEResult]:
+    """Evaluate candidate accelerators; every DSE step includes a full MSE
+    per benchmark layer (paper Sec 2.4)."""
+    cfg = cfg or GAConfig()
+    out = []
+    for spec in candidates:
+        mres = search_model(layers, spec, cfg)
+        ar = area_model.area_of(spec)
+        flexion = (model_flexion(spec, layers, flexion_samples)
+                   if with_flexion else None)
+        out.append(DSEResult(
+            spec_name=spec.name, class_str=spec.class_str(),
+            runtime=mres.runtime, energy=mres.energy, edp=mres.edp,
+            area=ar.total_area, power=ar.total_power, flexion=flexion,
+            model_result=mres))
+    return out
+
+
+# --------------------------------------------------------------------------
+# Sec 7: future-proofing workflow
+# --------------------------------------------------------------------------
+
+def design_fixed_accelerator(model_name: str, hw: Optional[HWConfig] = None,
+                             cfg: Optional[GAConfig] = None
+                             ) -> Tuple[FlexSpec, np.ndarray, ModelResult]:
+    """InFlex-0000-<model>-Opt: harden the best single mapping into silicon."""
+    hw = hw or HWConfig()
+    layers = get_model(model_name)
+    # search over the full space for the best *single* config
+    probe_spec = FlexSpec(name=f"probe-{model_name}", hw=hw)
+    genome, res = search_fixed_config(layers, probe_spec, cfg)
+    spec = freeze_spec_from_genome(probe_spec, layers, genome,
+                                   name=f"InFlex0000-{model_name}-Opt")
+    return spec, genome, res
+
+
+def freeze_spec_from_genome(probe_spec: FlexSpec, layers: Sequence[Layer],
+                            genome: np.ndarray, name: str) -> FlexSpec:
+    """Turn a search genome into an InFlex-0000 spec (fixed T/O/P/S)."""
+    probe = Layer("probe", tuple(int(v) for v in
+                                 np.max([l.dims for l in layers], axis=0)))
+    space = MapSpace(probe, probe_spec)
+    m = space.decode(space.clip(genome[None, :])[0])
+    return FlexSpec(
+        name=name, hw=probe_spec.hw,
+        tile=TileSpec(flex=INFLEX, fixed_tile=m.tiles),
+        order=OrderSpec(flex=INFLEX, fixed_order=perm_to_order_str(m.order)),
+        parallel=ParallelSpec(flex=INFLEX,
+                              fixed_pair=(DIMS[m.parallel[0]],
+                                          DIMS[m.parallel[1]])),
+        shape=ShapeSpec(flex=INFLEX, fixed_shape=m.shape),
+    )
+
+
+def open_axes(frozen: FlexSpec, class_str: str, level: str = FULLFLEX,
+              name: Optional[str] = None) -> FlexSpec:
+    """Open the axes marked '1' in class_str on an otherwise frozen design
+    (FullFlex-xxxx-<model>-Opt in Fig 13)."""
+    assert len(class_str) == 4
+    t, o, p, s = class_str
+    prefix = {PARTFLEX: "PartFlex", FULLFLEX: "FullFlex"}[level]
+    return FlexSpec(
+        name=name or f"{prefix}{class_str}-" + frozen.name.split("-", 1)[-1],
+        hw=frozen.hw,
+        tile=dataclasses.replace(frozen.tile,
+                                 flex=level if t == "1" else INFLEX),
+        order=dataclasses.replace(frozen.order,
+                                  flex=level if o == "1" else INFLEX),
+        parallel=dataclasses.replace(frozen.parallel,
+                                     flex=level if p == "1" else INFLEX),
+        shape=dataclasses.replace(frozen.shape,
+                                  flex=level if s == "1" else INFLEX),
+    )
+
+
+def future_proofing_study(base_model: str = "alexnet",
+                          future_models: Sequence[str] = (
+                              "alexnet", "mnasnet", "resnet50", "mobilenetv2",
+                              "bert", "dlrm", "ncf"),
+                          class_strs: Sequence[str] = (
+                              "1000", "0100", "0010", "0001", "0011", "0101",
+                              "1001", "0110", "1010", "1100", "1110", "1011",
+                              "0111", "1101", "1111"),
+                          hw: Optional[HWConfig] = None,
+                          cfg: Optional[GAConfig] = None,
+                          include_partflex_1111: bool = True
+                          ) -> Dict[str, Dict[str, float]]:
+    """Fig 13: rows = accelerator variants, cols = models, values = runtime
+    normalized to InFlex-0000-<base>-Opt on that model."""
+    cfg = cfg or GAConfig()
+    frozen, genome, _ = design_fixed_accelerator(base_model, hw, cfg)
+
+    table: Dict[str, Dict[str, float]] = {}
+    baseline_rt: Dict[str, float] = {}
+
+    # row 1: the frozen 2014 accelerator on every model
+    row = {}
+    for m in future_models:
+        res = evaluate_fixed_genome(get_model(m), frozen, genome)
+        row[m] = res.runtime
+        baseline_rt[m] = res.runtime
+    table[f"InFlex0000-{base_model}-Opt"] = row
+
+    # row 2: a fixed accelerator re-optimized per future model
+    row = {}
+    for m in future_models:
+        if m == base_model:
+            row[m] = baseline_rt[m]
+            continue
+        _, _, res = design_fixed_accelerator(m, hw, cfg)
+        row[m] = res.runtime
+    table["InFlex0000-X-Opt"] = row
+
+    # flexible variants of the 2014 design
+    for cs in class_strs:
+        spec = open_axes(frozen, cs, FULLFLEX)
+        row = {}
+        for m in future_models:
+            row[m] = search_model(get_model(m), spec, cfg).runtime
+        table[spec.name] = row
+
+    if include_partflex_1111:
+        spec = open_axes(frozen, "1111", PARTFLEX)
+        row = {}
+        for m in future_models:
+            row[m] = search_model(get_model(m), spec, cfg).runtime
+        table[spec.name] = row
+
+    # normalize by the frozen baseline per column
+    base_row = table[f"InFlex0000-{base_model}-Opt"]
+    norm = {r: {m: v / base_row[m] for m, v in cols.items()}
+            for r, cols in table.items()}
+    return norm
+
+
+def geomean_speedup(norm_table: Dict[str, Dict[str, float]],
+                    flex_row: str, models: Optional[Sequence[str]] = None
+                    ) -> float:
+    """Geomean of 1/normalized-runtime for a flexible row (paper: 11.8x)."""
+    row = norm_table[flex_row]
+    models = models or list(row.keys())
+    vals = np.asarray([row[m] for m in models], np.float64)
+    return float(np.exp(np.mean(np.log(1.0 / np.maximum(vals, 1e-12)))))

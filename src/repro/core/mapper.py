@@ -1,0 +1,305 @@
+"""GAMMA-style genetic-algorithm mapper with flexibility-constrained operators
+(paper Sec 5).
+
+The native GAMMA mapper supports InFlex-0000 or FullFlex-1111; the paper's
+extension (reproduced here) constrains the search inside any of the 16
+classes and further inside PartFlex subsets:
+
+  * inflexible axes are *pinned* (genes never mutate off the fixed value),
+  * PartFlex axes index into restricted tables (orders / pairs / shapes) or
+    apply the hard-partition legality (tiles),
+  * FullFlex axes roam the full constrained space C_X.
+
+Population evaluation is one vmapped jit over the analytical cost model, so
+the paper's 100x100 (10K sample) budget runs in well under a second per layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from .cost_model import CostResult, evaluate_population
+from .mapspace import Mapping, MapSpace
+from .spec import FlexSpec
+from .workloads import Layer, NUM_DIMS, layers_as_array
+
+
+@dataclasses.dataclass(frozen=True)
+class GAConfig:
+    population: int = 100
+    generations: int = 100      # paper: 100x100 = 10K samples
+    elite_frac: float = 0.10
+    mutation_rate: float = 0.5  # paper: 0.5
+    crossover_rate: float = 0.5
+    tile_divisor_bias: float = 0.3  # GAMMA-style: snap tiles to divisors
+    seed: int = 0
+    objective: str = "runtime"  # runtime | energy | edp
+
+
+@dataclasses.dataclass
+class MapperResult:
+    mapping: Mapping
+    runtime: float
+    energy: float
+    edp: float
+    util: float
+    dram_elems: float
+    feasible: bool
+    history: List[float]        # best objective per generation
+
+    def objective(self, name: str) -> float:
+        return {"runtime": self.runtime, "energy": self.energy,
+                "edp": self.edp}[name]
+
+
+def _objective_values(res: CostResult, objective: str) -> np.ndarray:
+    arr = {"runtime": res.runtime, "energy": res.energy,
+           "edp": res.edp}[objective]
+    return np.asarray(arr)
+
+
+def _divisors(n: int) -> np.ndarray:
+    n = int(n)
+    ds = [d for d in range(1, n + 1) if n % d == 0]
+    return np.asarray(ds, np.int32)
+
+
+class _Operators:
+    """Constraint-respecting GA operators over genome matrices (N, 9)."""
+
+    def __init__(self, space: MapSpace, cfg: GAConfig,
+                 rng: np.random.Generator):
+        self.space = space
+        self.cfg = cfg
+        self.rng = rng
+        self.divisors = [_divisors(space.dims[d]) for d in range(NUM_DIMS)]
+
+    def mutate(self, g: np.ndarray) -> np.ndarray:
+        g = g.copy()
+        n = len(g)
+        rate = self.cfg.mutation_rate
+        sp = self.space
+        # tiles: geometric step, or divisor snap
+        for d in range(NUM_DIMS):
+            if sp.tile_lo[d] == sp.tile_hi[d]:
+                continue  # pinned (InFlex-T)
+            m = self.rng.random(n) < rate
+            step = np.exp(self.rng.normal(0.0, 0.7, n))
+            newv = np.maximum(1, np.round(g[:, d] * step)).astype(np.int64)
+            snap = self.rng.random(n) < self.cfg.tile_divisor_bias
+            dv = self.divisors[d][self.rng.integers(0, len(self.divisors[d]), n)]
+            newv = np.where(snap, dv, newv)
+            g[:, d] = np.where(m, newv, g[:, d])
+        # index genes: resample or +-1 walk
+        for gi, table_len in ((6, len(sp.order_table)),
+                              (7, len(sp.pair_table)),
+                              (8, len(sp.shape_table))):
+            if table_len <= 1:
+                continue  # pinned axis
+            m = self.rng.random(n) < rate
+            walk = self.rng.random(n) < 0.5
+            stepped = g[:, gi] + self.rng.choice([-1, 1], n)
+            sampled = self.rng.integers(0, table_len, n)
+            g[:, gi] = np.where(m, np.where(walk, stepped, sampled), g[:, gi])
+        return self.space.clip(g)
+
+    def crossover(self, parents: np.ndarray) -> np.ndarray:
+        n = len(parents)
+        mates = parents[self.rng.permutation(n)]
+        mask = self.rng.random((n, self.space.GENOME_LEN)) < 0.5
+        do = (self.rng.random(n) < self.cfg.crossover_rate)[:, None]
+        children = np.where(do & mask, mates, parents)
+        return self.space.clip(children)
+
+
+def search(layer: Layer, spec: FlexSpec,
+           cfg: Optional[GAConfig] = None) -> MapperResult:
+    """MSE for one layer on one accelerator (paper Fig 6 inner loop)."""
+    cfg = cfg or GAConfig()
+    rng = np.random.default_rng(cfg.seed)
+    space = MapSpace(layer, spec)
+    ops = _Operators(space, cfg, rng)
+
+    dims = jnp.asarray(layer.dims)
+    stride = jnp.asarray(layer.stride)
+    dw = jnp.asarray(layer.depthwise)
+
+    pop = space.sample(rng, cfg.population)
+    # seed the population with the baseline fixed mapping where legal
+    base = space.clip(np.concatenate([
+        np.minimum(np.asarray(spec.tile.fixed_tile, np.int32), space.dims),
+        [0, 0, 0]])[None, :])
+    pop[0] = base[0]
+
+    n_elite = max(1, int(cfg.elite_frac * cfg.population))
+    best_hist: List[float] = []
+    best_g: Optional[np.ndarray] = None
+    best_obj = np.inf
+    best_idx_res: Optional[Tuple[CostResult, int]] = None
+
+    for _ in range(cfg.generations):
+        tiles, orders, pairs, shapes = space.decode_batch(pop)
+        res = evaluate_population(
+            dims, stride, dw, jnp.asarray(tiles), jnp.asarray(orders),
+            jnp.asarray(pairs), jnp.asarray(shapes), spec.hw,
+            space.hard_partition)
+        obj = _objective_values(res, cfg.objective)
+        order_idx = np.argsort(obj)
+        if obj[order_idx[0]] < best_obj:
+            best_obj = float(obj[order_idx[0]])
+            best_g = pop[order_idx[0]].copy()
+            best_idx_res = (res, int(order_idx[0]))
+        best_hist.append(best_obj)
+
+        elites = pop[order_idx[:n_elite]]
+        # rank-based parent selection
+        ranks = np.empty(len(pop))
+        ranks[order_idx] = np.arange(len(pop))
+        probs = (len(pop) - ranks)
+        probs = probs / probs.sum()
+        parent_idx = rng.choice(len(pop), cfg.population - n_elite, p=probs)
+        children = ops.crossover(pop[parent_idx])
+        children = ops.mutate(children)
+        pop = np.concatenate([elites, children], axis=0)
+
+    assert best_g is not None and best_idx_res is not None
+    res, i = best_idx_res
+    return MapperResult(
+        mapping=space.decode(best_g),
+        runtime=float(res.runtime[i]), energy=float(res.energy[i]),
+        edp=float(res.edp[i]), util=float(res.util[i]),
+        dram_elems=float(res.dram_elems[i]),
+        feasible=bool(res.feasible[i]), history=best_hist,
+    )
+
+
+@dataclasses.dataclass
+class ModelResult:
+    per_layer: List[MapperResult]
+    runtime: float
+    energy: float
+    edp: float
+
+    @property
+    def feasible(self) -> bool:
+        return all(r.feasible for r in self.per_layer)
+
+
+def search_model(layers: Sequence[Layer], spec: FlexSpec,
+                 cfg: Optional[GAConfig] = None,
+                 dedup: bool = True) -> ModelResult:
+    """Per-layer MSE (flexible accelerators re-map every layer; paper Sec 3.1
+    scope: layers run sequentially).  Identical layer shapes share one search
+    (`dedup`) — ResNet-style nets repeat blocks heavily."""
+    cfg = cfg or GAConfig()
+    results: List[Optional[MapperResult]] = [None] * len(layers)
+    seen: Dict[tuple, int] = {}
+    for i, layer in enumerate(layers):
+        key = (layer.dims, layer.stride, layer.depthwise)
+        if dedup and key in seen:
+            results[i] = results[seen[key]]
+            continue
+        lcfg = dataclasses.replace(cfg, seed=cfg.seed + 1000 * i)
+        results[i] = search(layer, spec, lcfg)
+        seen[key] = i
+    runtime = float(sum(r.runtime for r in results))
+    energy = float(sum(r.energy for r in results))
+    return ModelResult(per_layer=results, runtime=runtime, energy=energy,
+                       edp=runtime * energy)
+
+
+def evaluate_fixed_genome(layers: Sequence[Layer], spec: FlexSpec,
+                          genome: np.ndarray) -> ModelResult:
+    """Run ONE mapping config on every layer (what an InFlex accel does)."""
+    per_layer = []
+    for layer in layers:
+        space = MapSpace(layer, spec)
+        g = genome[None, :].copy()
+        tiles, orders, pairs, shapes = space.decode_batch(space.clip(g))
+        res = evaluate_population(
+            jnp.asarray(layer.dims), jnp.asarray(layer.stride),
+            jnp.asarray(layer.depthwise), jnp.asarray(tiles),
+            jnp.asarray(orders), jnp.asarray(pairs), jnp.asarray(shapes),
+            spec.hw, space.hard_partition)
+        per_layer.append(MapperResult(
+            mapping=space.decode(space.clip(g)[0]),
+            runtime=float(res.runtime[0]), energy=float(res.energy[0]),
+            edp=float(res.edp[0]), util=float(res.util[0]),
+            dram_elems=float(res.dram_elems[0]),
+            feasible=bool(res.feasible[0]), history=[]))
+    runtime = float(sum(r.runtime for r in per_layer))
+    energy = float(sum(r.energy for r in per_layer))
+    return ModelResult(per_layer=per_layer, runtime=runtime, energy=energy,
+                       edp=runtime * energy)
+
+
+def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
+                        cfg: Optional[GAConfig] = None
+                        ) -> Tuple[np.ndarray, ModelResult]:
+    """DSE for an *inflexible* accelerator: find the single TOPS config that
+    minimizes whole-model runtime (paper Sec 7, InFlex-0000-X-Opt).
+
+    The genome is shared across layers; per-layer tile clipping applies."""
+    cfg = cfg or GAConfig()
+    rng = np.random.default_rng(cfg.seed)
+    # use the largest layer's space for sampling bounds
+    dims_mat = layers_as_array(layers)
+    probe = Layer("probe", tuple(int(v) for v in dims_mat.max(axis=0)))
+    space = MapSpace(probe, spec)
+    ops = _Operators(space, cfg, rng)
+
+    dims = jnp.asarray(dims_mat)
+    strides = jnp.asarray([l.stride for l in layers])
+    dws = jnp.asarray([l.depthwise for l in layers])
+
+    import jax
+
+    def raw_tile_feasible(tiles):
+        """Hard-coded loop bounds must fit the buffer for ANY workload
+        (tiles only ever clip DOWN on a layer): otherwise the hardened
+        design would be unbuildable/unrunnable on future models."""
+        t = tiles.astype(np.float64)
+        in_vol = t[:, 1] * (t[:, 2] - 1 + t[:, 4]) * (t[:, 3] - 1 + t[:, 5])
+        w_vol = t[:, 0] * t[:, 1] * t[:, 4] * t[:, 5]
+        o_vol = t[:, 0] * t[:, 2] * t[:, 3]
+        return (in_vol + w_vol + o_vol) <= spec.hw.buffer_elems
+
+    def pop_model_obj(tiles, orders, pairs, shapes):
+        def per_layer(d, s, w):
+            return evaluate_population(d, s, w, tiles, orders, pairs, shapes,
+                                       spec.hw, space.hard_partition)
+        res = jax.vmap(per_layer)(dims, strides, dws)  # (L, P) fields
+        runtime = jnp.sum(res.runtime, axis=0)
+        energy = jnp.sum(res.energy, axis=0)
+        penalty = jnp.where(jnp.asarray(raw_tile_feasible(
+            np.asarray(tiles))), 0.0, 1e30)
+        runtime = runtime + penalty
+        energy = energy + penalty
+        return runtime, energy, runtime * energy
+
+    pop = space.sample(rng, cfg.population)
+    n_elite = max(1, int(cfg.elite_frac * cfg.population))
+    best_obj, best_g = np.inf, None
+    for _ in range(cfg.generations):
+        tiles, orders, pairs, shapes = space.decode_batch(pop)
+        rt, en, edp = pop_model_obj(jnp.asarray(tiles), jnp.asarray(orders),
+                                    jnp.asarray(pairs), jnp.asarray(shapes))
+        obj = np.asarray({"runtime": rt, "energy": en, "edp": edp}
+                         [cfg.objective])
+        order_idx = np.argsort(obj)
+        if obj[order_idx[0]] < best_obj:
+            best_obj = float(obj[order_idx[0]])
+            best_g = pop[order_idx[0]].copy()
+        elites = pop[order_idx[:n_elite]]
+        ranks = np.empty(len(pop))
+        ranks[order_idx] = np.arange(len(pop))
+        probs = (len(pop) - ranks) / np.sum(len(pop) - ranks)
+        parent_idx = rng.choice(len(pop), cfg.population - n_elite, p=probs)
+        children = ops.mutate(ops.crossover(pop[parent_idx]))
+        pop = np.concatenate([elites, children], axis=0)
+
+    assert best_g is not None
+    return best_g, evaluate_fixed_genome(layers, spec, best_g)

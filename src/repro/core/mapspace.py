@@ -1,0 +1,147 @@
+"""Map-space machinery: Mapping container, per-axis spaces, legality, counting.
+
+Implements the paper's Table 1 objects:
+
+  W_X^w : workload map space (all T/O/P/S combos legal for the layer alone)
+  C_X   : class map space (all combos legal under the HW *resources*)
+  A_X   : target-accelerator map space (C_X + the accelerator's added
+          constraints, e.g. hard-partitioned buffers, order subsets, ...)
+
+Tile spaces are astronomically large (the paper quotes O(10^24) full map
+spaces), so exact enumeration is used only for the O/P/S axes (720 / 30 /
+|shape table| points); the T axis is counted exactly per-dim and intersected
+with buffer constraints by Monte-Carlo estimation in flexion.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import numpy as np
+
+from .spec import FlexSpec, HWConfig, INFLEX
+from .workloads import Layer, NUM_DIMS
+
+
+@dataclasses.dataclass(frozen=True)
+class Mapping:
+    """A single design point: precise values for T, O, P, S (paper Sec 4.1)."""
+
+    tiles: Tuple[int, ...]              # 6 tile sizes (K, C, Y, X, R, S)
+    order: Tuple[int, ...]              # permutation, outermost first
+    parallel: Tuple[int, int]           # dims on (rows, cols)
+    shape: Tuple[int, int]              # (rows, cols)
+
+    def as_genome(self, spec: "MapSpace") -> np.ndarray:
+        return spec.encode(self)
+
+
+class MapSpace:
+    """The feasible map space A_X^w of one accelerator on one layer.
+
+    Mappings are encoded as fixed-length integer genomes for the GA mapper:
+
+      genome[0:6]  tile sizes (raw ints, legality via cost-model penalty)
+      genome[6]    index into the order table
+      genome[7]    index into the parallel-pair table
+      genome[8]    index into the shape table
+    """
+
+    GENOME_LEN = 9
+
+    def __init__(self, layer: Layer, spec: FlexSpec):
+        self.layer = layer
+        self.spec = spec
+        self.dims = np.asarray(layer.dims, dtype=np.int32)
+        self.order_table = spec.order.order_table()
+        self.pair_table = spec.parallel.pair_table()
+        self.shape_table = spec.shape.shape_table(spec.hw.num_pes)
+        if spec.tile.flex == INFLEX:
+            fixed = np.minimum(np.asarray(spec.tile.fixed_tile, np.int32),
+                               self.dims)
+            self.tile_lo = fixed.copy()
+            self.tile_hi = fixed.copy()
+        else:
+            self.tile_lo = np.ones(NUM_DIMS, np.int32)
+            self.tile_hi = self.dims.copy()
+        self.hard_partition = spec.tile.flex == "part"
+
+    # -- encode / decode ----------------------------------------------------
+    def encode(self, m: Mapping) -> np.ndarray:
+        g = np.zeros(self.GENOME_LEN, np.int32)
+        g[0:6] = m.tiles
+        g[6] = _row_index(self.order_table, np.asarray(m.order, np.int32))
+        g[7] = _row_index(self.pair_table, np.asarray(m.parallel, np.int32))
+        g[8] = _row_index(self.shape_table, np.asarray(m.shape, np.int32))
+        return g
+
+    def decode(self, genome: np.ndarray) -> Mapping:
+        g = np.asarray(genome)
+        return Mapping(
+            tiles=tuple(int(v) for v in g[0:6]),
+            order=tuple(int(v) for v in self.order_table[int(g[6])]),
+            parallel=tuple(int(v) for v in self.pair_table[int(g[7])]),
+            shape=tuple(int(v) for v in self.shape_table[int(g[8])]),
+        )
+
+    # -- random sampling (respects per-axis flexibility) ---------------------
+    def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
+        g = np.zeros((n, self.GENOME_LEN), np.int32)
+        for d in range(NUM_DIMS):
+            g[:, d] = rng.integers(self.tile_lo[d], self.tile_hi[d] + 1, n)
+        g[:, 6] = rng.integers(0, len(self.order_table), n)
+        g[:, 7] = rng.integers(0, len(self.pair_table), n)
+        g[:, 8] = rng.integers(0, len(self.shape_table), n)
+        return g
+
+    def clip(self, genomes: np.ndarray) -> np.ndarray:
+        """Project genomes back into the legal (axis-constrained) space."""
+        g = np.asarray(genomes).copy()
+        g[:, 0:6] = np.clip(g[:, 0:6], self.tile_lo, self.tile_hi)
+        g[:, 6] = np.mod(g[:, 6], len(self.order_table))
+        g[:, 7] = np.mod(g[:, 7], len(self.pair_table))
+        g[:, 8] = np.mod(g[:, 8], len(self.shape_table))
+        return g
+
+    # -- decoded arrays for the vectorized cost model ------------------------
+    def decode_batch(self, genomes: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        g = np.asarray(genomes)
+        tiles = g[:, 0:6].astype(np.int32)
+        orders = self.order_table[np.mod(g[:, 6], len(self.order_table))]
+        pairs = self.pair_table[np.mod(g[:, 7], len(self.pair_table))]
+        shapes = self.shape_table[np.mod(g[:, 8], len(self.shape_table))]
+        return tiles, orders, pairs, shapes
+
+    # -- axis-space cardinalities (exact where tractable) ---------------------
+    def axis_cardinalities(self) -> dict:
+        tile_card = int(np.prod((self.tile_hi - self.tile_lo + 1)
+                                .astype(np.float64)))
+        return {
+            "T": tile_card,
+            "O": len(self.order_table),
+            "P": len(self.pair_table),
+            "S": len(self.shape_table),
+        }
+
+    def size_upper_bound(self) -> float:
+        c = self.axis_cardinalities()
+        return float(c["T"]) * c["O"] * c["P"] * c["S"]
+
+
+def _row_index(table: np.ndarray, row: np.ndarray) -> int:
+    hits = np.where((table == row[None, :]).all(axis=1))[0]
+    if len(hits) == 0:
+        raise ValueError(f"row {row} not in table (axis not that flexible)")
+    return int(hits[0])
+
+
+def workload_space_size(layer: Layer, hw: Optional[HWConfig] = None) -> float:
+    """|W_X^w|: every tile size 1..dim, every order, every parallel pair,
+    every array shape up to num_pes (workload space is HW-agnostic for T/O/P;
+    S is bounded by an arbitrary max array size — we use the HW's)."""
+    hw = hw or HWConfig()
+    dims = np.asarray(layer.dims, dtype=np.float64)
+    n_shapes = len(
+        FlexSpec().shape.shape_table(hw.num_pes))
+    return float(np.prod(dims)) * 720.0 * 30.0 * n_shapes

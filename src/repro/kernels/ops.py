@@ -1,0 +1,69 @@
+"""jit'd public entry points for the Pallas kernels.
+
+On CPU (this container) the kernels execute with interpret=True; on TPU the
+same `pl.pallas_call` lowers to Mosaic.  `use_pallas=False` falls back to
+the XLA reference path — that is what the multi-pod dry-run lowers, so
+compile artifacts never depend on interpret mode.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .flash_attention import flash_attention as _flash
+from .flash_attention import flash_attention_bshd as _flash_bshd
+from .mamba_scan import mamba_scan as _mamba
+from .tiled_matmul import tiled_matmul as _matmul
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "bk", "order", "use_pallas"))
+def matmul(x, y, *, bm=128, bn=128, bk=128, order="out", use_pallas=True):
+    if not use_pallas:
+        return ref.matmul_ref(x, y)
+    return _matmul(x, y, bm=bm, bn=bn, bk=bk, order=order,
+                   interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "use_pallas"))
+def attention(q, k, v, *, causal=True, bq=256, bkv=256, use_pallas=True):
+    if not use_pallas:
+        return ref.attention_ref(q, k, v, causal=causal)
+    return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                  interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("causal", "bq", "bkv", "use_pallas"))
+def attention_bshd(q, k, v, *, causal=True, bq=256, bkv=256,
+                   use_pallas=True):
+    if not use_pallas:
+        h = q.shape[2] // k.shape[2]
+        kk = jnp.repeat(k, h, axis=2).transpose(0, 2, 1, 3)
+        vv = jnp.repeat(v, h, axis=2).transpose(0, 2, 1, 3)
+        qq = q.transpose(0, 2, 1, 3)
+        b, hh, sq, d = qq.shape
+        o = ref.attention_ref(qq.reshape(b * hh, sq, d),
+                              kk.reshape(b * hh, -1, d),
+                              vv.reshape(b * hh, -1, d), causal=causal)
+        return o.reshape(b, hh, sq, d).transpose(0, 2, 1, 3)
+    return _flash_bshd(q, k, v, causal=causal, bq=bq, bkv=bkv,
+                       interpret=_interpret())
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "d_block", "use_pallas"))
+def mamba_scan(x, dt, b, c, a_log_neg, d_skip, *, chunk=128, d_block=512,
+               use_pallas=True):
+    if not use_pallas:
+        return ref.mamba_scan_ref(x, dt, b, c, a_log_neg, d_skip)
+    return _mamba(x, dt, b, c, a_log_neg, d_skip, chunk=chunk,
+                  d_block=d_block, interpret=_interpret())

@@ -1,0 +1,111 @@
+"""TOPS-configurable tiled matmul Pallas kernel (TPU target).
+
+The paper's four flexibility axes, concretely, at the kernel level:
+
+  T — block shape (bm, bn, bk): the VMEM tile sizes.  Legality = blocks fit
+      VMEM and are MXU-aligned (the analogue of "tiles fit the L2 buffer").
+  O — grid iteration order == which operand is *stationary* in VMEM:
+        'out' : grid (M, N, K), K innermost — output-stationary, fp32
+                accumulator scratch (one HBM write per output tile)
+        'a'   : grid (M, K, N), N innermost — A-tile stationary
+        'b'   : grid (N, K, M), M innermost — B-tile stationary
+  P — the grid itself (which dims are expanded spatially over cores).
+  S — chosen one level up (mesh shape), see repro.core.tops_bridge.
+
+The flexibility-aware mapper (repro.core) picks (T, O) for a given GEMM
+shape; `ops.matmul` is the jit entry point and `ref.matmul_ref` the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _out_stationary_kernel(x_ref, y_ref, o_ref, acc_ref, *, n_k: int):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(pl.program_id(2) == n_k - 1)
+    def _store():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _accumulate_kernel(x_ref, y_ref, o_ref, *, init_axis: int):
+    """A/B-stationary orders: accumulate directly into the output block
+    (revisited across the reduction loop)."""
+    @pl.when(pl.program_id(init_axis) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(x_ref[...], y_ref[...],
+                          preferred_element_type=jnp.float32
+                          ).astype(o_ref.dtype)
+
+
+def tiled_matmul(x: jnp.ndarray, y: jnp.ndarray, *,
+                 bm: int = 128, bn: int = 128, bk: int = 128,
+                 order: str = "out", interpret: bool = False) -> jnp.ndarray:
+    """x: (M, K) @ y: (K, N) -> (M, N) with explicit T (blocks) and O (order)."""
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2
+    bm, bn, bk = min(bm, m), min(bn, n), min(bk, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"blocks must divide dims: {(m, n, k)} vs {(bm, bn, bk)}"
+    gm, gn, gk = m // bm, n // bn, k // bk
+
+    if order == "out":
+        # grid (i, j, kk): K innermost; fp32 accumulator in VMEM scratch
+        return pl.pallas_call(
+            functools.partial(_out_stationary_kernel, n_k=gk),
+            grid=(gm, gn, gk),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+            interpret=interpret,
+        )(x, y)
+    if order == "a":
+        # grid (i, kk, j): N innermost; A block (i, kk) stationary across j
+        return pl.pallas_call(
+            functools.partial(_accumulate_kernel, init_axis=1),
+            grid=(gm, gk, gn),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda i, kk, j: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda i, kk, j: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda i, kk, j: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=interpret,
+        )(x, y)
+    if order == "b":
+        # grid (j, kk, i): M innermost; B block (kk, j) stationary across i
+        return pl.pallas_call(
+            functools.partial(_accumulate_kernel, init_axis=1),
+            grid=(gn, gk, gm),
+            in_specs=[
+                pl.BlockSpec((bm, bk), lambda j, kk, i: (i, kk)),
+                pl.BlockSpec((bk, bn), lambda j, kk, i: (kk, j)),
+            ],
+            out_specs=pl.BlockSpec((bm, bn), lambda j, kk, i: (i, j)),
+            out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+            interpret=interpret,
+        )(x, y)
+    raise ValueError(f"unknown order {order!r}")
+
+
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 2) -> int:
+    """VMEM working set of one grid step (the kernel-level T constraint)."""
+    return (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4  # fp32 acc

@@ -1,0 +1,1 @@
+"""Launchers: production mesh, train/serve step builders, multi-pod dry-run."""

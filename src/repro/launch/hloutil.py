@@ -1,0 +1,74 @@
+"""Pure HLO-analysis helpers for the dry-run (importable without touching
+jax device state: the 512-device XLA_FLAGS lives only in dryrun.py)."""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+ICI_LINKS = 4                # v5e links used per chip (2D torus)
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8": 1,
+                "s64": 8, "s32": 4, "u64": 8, "u32": 4, "s16": 2, "u16": 2,
+                "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16}
+
+_COLL_RE = re.compile(
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?(?:\.\d+)?\s*\(")
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*)\[([0-9,]*)\]")
+
+
+def _line_operand_bytes(line: str) -> float:
+    """Sum every tensor shape printed on the instruction line (result and
+    any annotated operands).  HLO text prints operands without shapes, so
+    the RESULT size is the reliable proxy: all-gather result = bytes
+    received/device; all-reduce result = bytes reduced; reduce-scatter /
+    all-to-all results = bytes kept (a mild undercount we accept
+    consistently across baseline and optimized variants)."""
+    try:
+        rhs = line.split("=", 1)[1]
+    except IndexError:
+        rhs = line
+    # strip metadata/replica_groups tails that could contain no shapes anyway
+    total = 0.0
+    for dt, dims in _SHAPE_RE.findall(rhs):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, float]:
+    """Per-device bytes moved by collectives (post-SPMD compiled HLO)."""
+    out: Dict[str, float] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "=" not in line:
+            continue
+        kind = m.group(1)
+        out[kind] = out.get(kind, 0.0) + _line_operand_bytes(line)
+    out["total"] = sum(v for k, v in out.items() if k != "total")
+    return out
+
+
+def roofline_terms(flops: float, hbm_bytes: float,
+                   coll_bytes: float) -> Dict[str, float]:
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm_bytes / HBM_BW
+    collective_s = coll_bytes / (ICI_BW * ICI_LINKS)
+    dominant = max(("compute", compute_s), ("memory", memory_s),
+                   ("collective", collective_s), key=lambda kv: kv[1])[0]
+    total = max(compute_s, memory_s, collective_s)
+    return {"compute_s": compute_s, "memory_s": memory_s,
+            "collective_s": collective_s, "dominant": dominant,
+            "bound_s": total,
+            "roofline_fraction": compute_s / total if total else 0.0}
+
+

@@ -1,0 +1,199 @@
+"""Step builders: sharded train_step / prefill_step / serve_step.
+
+These assemble model + optimizer + sharding rules into jit-able functions
+with explicit in/out shardings — the objects the dry-run lowers and the real
+launchers execute.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..dist.api import axis_rules
+from ..dist.sharding import (batch_spec, cache_shardings, make_rules,
+                             param_shardings)
+from ..models import (ModelConfig, decode_step, init_cache, init_params,
+                      loss_fn, prefill)
+from ..optim import Optimizer, adafactor, adamw, opt_shardings
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: Any
+    step: jnp.ndarray
+
+
+def default_optimizer(cfg: ModelConfig) -> Optimizer:
+    """Adafactor for trillion-class models (factored 2nd moment), AdamW else."""
+    if cfg.param_count() > 100e9:
+        return adafactor(1e-2)
+    return adamw(3e-4)
+
+
+def make_train_step(cfg: ModelConfig, opt: Optimizer):
+    """(state, batch) -> (state, metrics); microbatching via grad-accum when
+    cfg-side callers split the batch."""
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def lf(p):
+            return loss_fn(cfg, p, batch)
+
+        (loss, metrics), grads = jax.value_and_grad(lf, has_aux=True)(
+            state.params)
+        new_params, new_opt = opt.update(grads, state.opt, state.params,
+                                         state.step)
+        return (TrainState(params=new_params, opt=new_opt,
+                           step=state.step + 1),
+                {"loss": metrics["loss"], "aux_loss": metrics["aux_loss"],
+                 "step": state.step})
+
+    return train_step
+
+
+def make_grad_accum_train_step(cfg: ModelConfig, opt: Optimizer,
+                               n_micro: int):
+    """Gradient-accumulation variant: the T axis (microbatch size) of the
+    TOPS bridge.  Batch is split along dim 0 into n_micro slices."""
+
+    def train_step(state: TrainState, batch: Dict) -> Tuple[TrainState, Dict]:
+        def micro(i):
+            return jax.tree.map(
+                lambda x: jax.lax.dynamic_slice_in_dim(
+                    x, i * (x.shape[0] // n_micro), x.shape[0] // n_micro, 0),
+                batch)
+
+        def lf(p, b):
+            return loss_fn(cfg, p, b)
+
+        def body(carry, i):
+            g_acc, l_acc = carry
+            (loss, m), g = jax.value_and_grad(lf, has_aux=True)(
+                state.params, micro(i))
+            g_acc = jax.tree.map(jnp.add, g_acc, g)
+            return (g_acc, l_acc + m["loss"]), None
+
+        g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                          state.params)
+        (grads, loss_sum), _ = jax.lax.scan(body, (g0, 0.0),
+                                            jnp.arange(n_micro))
+        grads = jax.tree.map(lambda g: g / n_micro, grads)
+        new_params, new_opt = opt.update(grads, state.opt, state.params,
+                                         state.step)
+        return (TrainState(params=new_params, opt=new_opt,
+                           step=state.step + 1),
+                {"loss": loss_sum / n_micro, "step": state.step})
+
+    return train_step
+
+
+def state_specs(cfg: ModelConfig, opt: Optimizer):
+    """abstract TrainState via eval_shape (no allocation)."""
+    p_spec = jax.eval_shape(
+        lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    o_spec = jax.eval_shape(opt.init, p_spec)
+    return TrainState(params=p_spec, opt=o_spec,
+                      step=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def train_shardings(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
+                    rules=None) -> Tuple[TrainState, Any]:
+    rules = rules or make_rules(mesh, fsdp=cfg.fsdp,
+                            seq_activations=cfg.seq_shard_activations)
+    specs = state_specs(cfg, opt)
+    ps = param_shardings(cfg, specs.params, mesh, rules)
+    os_ = opt_shardings(opt, ps, specs.params, mesh)
+    state_sh = TrainState(params=ps, opt=os_,
+                          step=NamedSharding(mesh, P()))
+    return state_sh, batch_spec(mesh, rules)
+
+
+def jit_train_step(cfg: ModelConfig, opt: Optimizer, mesh: Mesh,
+                   batch_specs: Dict, rules=None, n_micro: int = 1):
+    rules = rules or make_rules(mesh, fsdp=cfg.fsdp,
+                            seq_activations=cfg.seq_shard_activations)
+    state_sh, bshard = train_shardings(cfg, opt, mesh, rules)
+    bsh_tree = jax.tree.map(bshard, batch_specs)
+    base = (make_train_step(cfg, opt) if n_micro <= 1
+            else make_grad_accum_train_step(cfg, opt, n_micro))
+
+    def wrapped(state, batch):
+        with axis_rules(mesh, rules):
+            return base(state, batch)
+
+    metric_sh = {"loss": NamedSharding(mesh, P()),
+                 "aux_loss": NamedSharding(mesh, P()),
+                 "step": NamedSharding(mesh, P())}
+    if n_micro > 1:
+        metric_sh = {"loss": NamedSharding(mesh, P()),
+                     "step": NamedSharding(mesh, P())}
+    fn = jax.jit(wrapped,
+                 in_shardings=(state_sh, bsh_tree),
+                 out_shardings=(state_sh, metric_sh))
+    return fn, state_sh, bsh_tree
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch, cache):
+        return prefill(cfg, params, batch, cache)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode step: (params, tokens (B,1), cache) -> (logits, cache)."""
+    def serve_step(params, tokens, cache):
+        return decode_step(cfg, params, tokens, cache)
+    return serve_step
+
+
+def serve_shardings(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                    rules=None, long_context: bool = False):
+    rules = rules or make_rules(mesh, fsdp=False, long_context=long_context)
+    p_spec = jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+    ps = param_shardings(cfg, p_spec, mesh, rules)
+    c_spec = jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+    cs = cache_shardings(cfg, c_spec, mesh, rules)
+    return ps, cs, batch_spec(mesh, rules), rules
+
+
+def jit_serve_step(cfg: ModelConfig, mesh: Mesh, batch: int, max_len: int,
+                   long_context: bool = False):
+    ps, cs, bshard, rules = serve_shardings(cfg, mesh, batch, max_len,
+                                            long_context=long_context)
+    base = make_serve_step(cfg)
+
+    def wrapped(params, tokens, cache):
+        with axis_rules(mesh, rules):
+            return base(params, tokens, cache)
+
+    fn = jax.jit(wrapped,
+                 in_shardings=(ps, bshard(jax.ShapeDtypeStruct(
+                     (batch, 1), jnp.int32)), cs),
+                 out_shardings=(bshard(jax.ShapeDtypeStruct(
+                     (batch, cfg.vocab_padded), jnp.float32)), cs))
+    return fn, ps, cs
+
+
+def jit_prefill_step(cfg: ModelConfig, mesh: Mesh, batch_specs: Dict,
+                     batch: int, max_len: int, long_context: bool = False):
+    ps, cs, bshard, rules = serve_shardings(cfg, mesh, batch, max_len,
+                                            long_context=long_context)
+    bsh_tree = jax.tree.map(bshard, batch_specs)
+    base = make_prefill_step(cfg)
+
+    def wrapped(params, batch_, cache):
+        with axis_rules(mesh, rules):
+            return base(params, batch_, cache)
+
+    fn = jax.jit(wrapped,
+                 in_shardings=(ps, bsh_tree, cs),
+                 out_shardings=(bshard(jax.ShapeDtypeStruct(
+                     (batch, cfg.vocab_padded), jnp.float32)), cs))
+    return fn, ps, cs

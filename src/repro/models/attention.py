@@ -1,0 +1,194 @@
+"""Attention blocks: GQA/MQA/MHA with KV cache, dense and flash (online
+softmax, never materializes S×S) implementations.
+
+The flash path (`flash_jnp`) is the XLA-lowerable twin of the Pallas kernel in
+``repro.kernels.flash_attention`` — same blocking scheme (the kernel's T axis),
+so the dry-run compiles the identical algorithm the TPU kernel executes.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, dense_init
+
+NEG_INF = -1e30
+
+
+def attn_init(key, cfg: ModelConfig, d_model: Optional[int] = None) -> Dict:
+    d = d_model or cfg.d_model
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], d, nh * hd, cfg.jdtype),
+        "wk": dense_init(ks[1], d, nkv * hd, cfg.jdtype),
+        "wv": dense_init(ks[2], d, nkv * hd, cfg.jdtype),
+        "wo": dense_init(ks[3], nh * hd, d, cfg.jdtype),
+    }
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, S_max, n_kv, hd)
+    v: jnp.ndarray        # (B, S_max, n_kv, hd)
+    pos: jnp.ndarray      # () int32 — tokens filled so far
+
+
+def init_kv_cache(batch: int, max_len: int, cfg: ModelConfig) -> KVCache:
+    shp = (batch, max_len, cfg.n_kv_heads, cfg.hd)
+    return KVCache(k=jnp.zeros(shp, cfg.jdtype), v=jnp.zeros(shp, cfg.jdtype),
+                   pos=jnp.zeros((), jnp.int32))
+
+
+def _dense_attention(q, k, v, causal: bool, q_pos, kv_len_mask=None,
+                     scale: Optional[float] = None):
+    """q: (B,Sq,H,hd) k/v: (B,Skv,KV,hd). GQA via head grouping."""
+    b, sq, h, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    group = h // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(b, sq, nkv, group, hd)
+    logits = jnp.einsum("bqkgd,bskd->bkgqs", qg * scale, k,
+                        preferred_element_type=jnp.float32)
+    kv_pos = jnp.arange(skv)
+    mask = jnp.ones((sq, skv), bool)
+    if causal:
+        mask = q_pos[:, None] >= kv_pos[None, :]
+    if kv_len_mask is not None:  # (B, Skv) valid positions
+        mask = mask[None] & kv_len_mask[:, None, :]
+        logits = jnp.where(mask[:, None, None], logits, NEG_INF)
+    else:
+        logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs, v)
+    return out.reshape(b, sq, h, hd)
+
+
+def _flash_attention_jnp(q, k, v, causal: bool, q_pos, kv_len_mask=None,
+                         block_kv: int = 1024, scale: Optional[float] = None,
+                         unroll: bool = False):
+    """Online-softmax blockwise attention; O(Sq * block) memory."""
+    b, sq, h, hd = q.shape
+    skv, nkv = k.shape[1], k.shape[2]
+    group = h // nkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = (q * scale).reshape(b, sq, nkv, group, hd)
+
+    block_kv = min(block_kv, skv)
+    n_blocks = -(-skv // block_kv)
+    pad = n_blocks * block_kv - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if kv_len_mask is None:
+            kv_len_mask = jnp.broadcast_to(jnp.arange(skv + pad) < skv,
+                                           (b, skv + pad))
+        else:
+            kv_len_mask = jnp.pad(kv_len_mask, ((0, 0), (0, pad)))
+    kb = k.reshape(b, n_blocks, block_kv, nkv, hd)
+    vb = v.reshape(b, n_blocks, block_kv, nkv, hd)
+    mb = (None if kv_len_mask is None
+          else kv_len_mask.reshape(b, n_blocks, block_kv))
+
+    def step(carry, blk):
+        m, l, acc = carry
+        kblk, vblk, idx, mblk = blk
+        kv_pos = idx * block_kv + jnp.arange(block_kv)
+        logits = jnp.einsum("bqkgd,bskd->bkgqs", qg, kblk,
+                            preferred_element_type=jnp.float32)
+        mask = jnp.ones((sq, block_kv), bool)
+        if causal:
+            mask = q_pos[:, None] >= kv_pos[None, :]
+        if mblk is not None:
+            full = mask[None] & mblk[:, None, :]
+            logits = jnp.where(full[:, None, None], logits, NEG_INF)
+        else:
+            logits = jnp.where(mask[None, None, None], logits, NEG_INF)
+        m_new = jnp.maximum(m, logits.max(axis=-1))
+        p = jnp.exp(logits - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        acc_new = acc * corr[..., None] \
+            + jnp.einsum("bkgqs,bskd->bkgqd", p.astype(vblk.dtype), vblk
+                         ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((b, nkv, group, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, nkv, group, sq), jnp.float32)
+    a0 = jnp.zeros((b, nkv, group, sq, hd), jnp.float32)
+    xs = (jnp.moveaxis(kb, 1, 0), jnp.moveaxis(vb, 1, 0),
+          jnp.arange(n_blocks),
+          None if mb is None else jnp.moveaxis(mb, 1, 0))
+    (m, l, acc), _ = jax.lax.scan(step, (m0, l0, a0), xs,
+                                  unroll=n_blocks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, sq, h, hd)
+    return out.astype(q.dtype)
+
+
+def multihead_attention(q, k, v, *, causal: bool, q_positions,
+                        kv_len_mask=None, impl: str = "auto",
+                        block_kv: int = 1024, unroll: bool = False):
+    """Dispatch on implementation.  'auto': dense attention for short query
+    spans (incl. decode, sq=1 — one-row scores are cheap even over a 500k
+    cache), flash beyond (never materializes Sq x Skv)."""
+    if impl == "auto":
+        impl = "flash_jnp" if q.shape[1] > 1024 else "dense"
+    if impl in ("dense",):
+        return _dense_attention(q, k, v, causal, q_positions, kv_len_mask)
+    if impl in ("flash_jnp", "pallas"):
+        # the pallas kernel is swapped in by ops-level dispatch on TPU; the
+        # jnp twin keeps CPU/dry-run lowerable.
+        return _flash_attention_jnp(q, k, v, causal, q_positions,
+                                    kv_len_mask, block_kv, unroll=unroll)
+    raise ValueError(impl)
+
+
+def attention_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig, *,
+                    positions: jnp.ndarray, causal: bool = True,
+                    cache: Optional[KVCache] = None,
+                    xkv: Optional[jnp.ndarray] = None,
+                    ) -> Tuple[jnp.ndarray, Optional[KVCache]]:
+    """Full attention sub-block: projections + rope + (cached) attention.
+
+    x: (B, S, D).  With `cache`, appends the new K/V at cache.pos and attends
+    over everything filled so far (decode or chunked prefill).  `xkv` switches
+    to cross-attention (no rope on k, no causal mask).
+    """
+    b, s, _ = x.shape
+    hd, nh, nkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    src = x if xkv is None else xkv
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(b, s, nh, hd)
+    k = jnp.einsum("bsd,dh->bsh", src, params["wk"]
+                   ).reshape(b, src.shape[1], nkv, hd)
+    v = jnp.einsum("bsd,dh->bsh", src, params["wv"]
+                   ).reshape(b, src.shape[1], nkv, hd)
+
+    if xkv is None:
+        q = apply_rope(q, positions, cfg.rope_mode, cfg.rope_fraction,
+                       cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_mode, cfg.rope_fraction,
+                       cfg.rope_theta)
+
+    new_cache = None
+    kv_len_mask = None
+    if cache is not None:
+        kc = jax.lax.dynamic_update_slice(
+            cache.k, k.astype(cache.k.dtype), (0, cache.pos, 0, 0))
+        vc = jax.lax.dynamic_update_slice(
+            cache.v, v.astype(cache.v.dtype), (0, cache.pos, 0, 0))
+        new_cache = KVCache(k=kc, v=vc, pos=cache.pos + s)
+        k, v = kc, vc
+        kv_len_mask = jnp.broadcast_to(
+            jnp.arange(k.shape[1])[None, :] < (cache.pos + s),
+            (b, k.shape[1]))
+
+    q_pos = positions if positions.ndim == 1 else positions[0]
+    out = multihead_attention(q, k, v, causal=causal and xkv is None,
+                              q_positions=q_pos, kv_len_mask=kv_len_mask,
+                              impl=cfg.attn_impl, block_kv=cfg.attn_block_kv,
+                              unroll=cfg.unroll_scans)
+    y = jnp.einsum("bsh,hd->bsd", out.reshape(b, s, nh * hd), params["wo"])
+    return y, new_cache

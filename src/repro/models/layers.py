@@ -1,0 +1,126 @@
+"""Composable primitive layers (pure functions over param pytrees)."""
+from __future__ import annotations
+
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, d_in: int, d_out: int, dtype, scale: Optional[float] = None
+               ) -> jnp.ndarray:
+    scale = scale if scale is not None else d_in ** -0.5
+    return (jax.random.normal(key, (d_in, d_out)) * scale).astype(dtype)
+
+
+def rmsnorm_init(d: int, dtype) -> jnp.ndarray:
+    return jnp.ones((d,), dtype)
+
+
+def rmsnorm(x: jnp.ndarray, scale: jnp.ndarray, eps: float = 1e-6
+            ) -> jnp.ndarray:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+def layernorm_init(d: int, dtype) -> Dict[str, jnp.ndarray]:
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(x: jnp.ndarray, p: Dict[str, jnp.ndarray], eps: float = 1e-5
+              ) -> jnp.ndarray:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(x.dtype)
+
+
+def norm_init(kind: str, d: int, dtype):
+    return rmsnorm_init(d, dtype) if kind == "rmsnorm" \
+        else layernorm_init(d, dtype)
+
+
+def apply_norm(kind: str, x, p):
+    return rmsnorm(x, p) if kind == "rmsnorm" else layernorm(x, p)
+
+
+def activate(kind: str, gate: jnp.ndarray, up: Optional[jnp.ndarray] = None
+             ) -> jnp.ndarray:
+    """Gated (swiglu/geglu need `up`) or plain activations."""
+    if kind == "swiglu":
+        return jax.nn.silu(gate) * up
+    if kind == "geglu":
+        return jax.nn.gelu(gate, approximate=True) * up
+    if kind == "gelu":
+        return jax.nn.gelu(gate, approximate=True)
+    if kind == "relu2":
+        r = jax.nn.relu(gate)
+        return r * r
+    raise ValueError(kind)
+
+
+def is_gated(kind: str) -> bool:
+    return kind in ("swiglu", "geglu")
+
+
+# --------------------------------------------------------------------------
+# Rotary position embeddings — full / partial (stablelm) / 2d (chatglm)
+# --------------------------------------------------------------------------
+
+def _rope_angles(positions: jnp.ndarray, dim: int, theta: float
+                 ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    freqs = 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+    ang = positions.astype(jnp.float32)[..., None] * freqs  # (..., dim/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def _rotate_half_pairs(x: jnp.ndarray, cos: jnp.ndarray, sin: jnp.ndarray
+                       ) -> jnp.ndarray:
+    # x: (..., dim) with pairs (x0, x1) interleaved as [even, odd] halves
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                           axis=-1)
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, mode: str,
+               fraction: float = 1.0, theta: float = 10000.0) -> jnp.ndarray:
+    """x: (B, S, H, hd); positions: (B, S) or (S,).
+
+    mode 'full'    — rotate the whole head_dim
+    mode 'partial' — rotate the first `fraction` of head_dim (StableLM)
+    mode '2d'      — ChatGLM RoPE-2d: rotate the first half with position ids
+                     (second half reserved for block ids; equal here)
+    mode 'none'    — identity
+    """
+    if mode == "none":
+        return x
+    hd = x.shape[-1]
+    if mode == "full":
+        rot = hd
+    elif mode == "partial":
+        rot = max(2, int(hd * fraction) // 2 * 2)
+    elif mode == "2d":
+        rot = hd // 2
+    else:
+        raise ValueError(mode)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    cos, sin = _rope_angles(positions, rot, theta)     # (B, S, rot/2)
+    cos = cos[:, :, None, :].astype(x.dtype)
+    sin = sin[:, :, None, :].astype(x.dtype)
+    x_rot = _rotate_half_pairs(x[..., :rot], cos, sin)
+    if mode == "2d":
+        # second rotary stream over the upper half (same ids — block ids equal
+        # position ids for standard causal LM usage)
+        upper = _rotate_half_pairs(x[..., rot:2 * rot], cos, sin)
+        return jnp.concatenate([x_rot, upper, x[..., 2 * rot:]], axis=-1)
+    return jnp.concatenate([x_rot, x[..., rot:]], axis=-1)
+
+
+def softcap(logits: jnp.ndarray, cap: float) -> jnp.ndarray:
+    if cap and cap > 0:
+        return cap * jnp.tanh(logits / cap)
+    return logits

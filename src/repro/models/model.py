@@ -1,0 +1,153 @@
+"""Public model API: init / forward / loss / prefill / decode_step.
+
+`batch` is a dict:
+  tokens        (B, S) int32           — always present (decoder tokens)
+  labels        (B, S) int32           — training
+  vision_embeds (B, n_vis, D)          — frontend='vision_stub'
+  audio_frames  (B, n_frames, D)       — block='encdec' (conv stub output)
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain
+from .attention import KVCache
+from .config import ModelConfig
+from .layers import dense_init, norm_init, apply_norm, softcap
+from .transformer import (EncDecCache, _sinusoidal, decode_stack,
+                          encdec_init, encdec_init_cache, encode,
+                          stack_apply, stack_init, stack_init_cache)
+
+
+def init_params(cfg: ModelConfig, key: jax.Array) -> Dict:
+    k_embed, k_stack, k_out = jax.random.split(key, 3)
+    params: Dict[str, Any] = {
+        "embed": (jax.random.normal(k_embed,
+                                    (cfg.vocab_padded, cfg.d_model))
+                  * cfg.d_model ** -0.5).astype(cfg.jdtype),
+        "ln_f": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+    }
+    if cfg.block == "encdec":
+        params["encdec"] = encdec_init(k_stack, cfg)
+    else:
+        params["stack"] = stack_init(k_stack, cfg)
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(k_out, cfg.d_model,
+                                       cfg.vocab_padded, cfg.jdtype)
+    return params
+
+
+def _embed_inputs(cfg: ModelConfig, params: Dict, batch: Dict) -> jnp.ndarray:
+    tokens = batch["tokens"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.frontend == "vision_stub" and "vision_embeds" in batch:
+        # precomputed ViT patch embeddings replace the leading positions
+        vis = batch["vision_embeds"].astype(x.dtype)
+        n = vis.shape[1]
+        x = jnp.concatenate([vis, x[:, n:]], axis=1)
+    return constrain(x, ("batch", "seq", None))
+
+
+def _logits(cfg: ModelConfig, params: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    x = apply_norm(cfg.norm, x, params["ln_f"])
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    logits = softcap(logits.astype(jnp.float32), cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:
+        # padded ids can never win or contribute to logsumexp
+        mask = jnp.arange(cfg.vocab_padded) < cfg.vocab
+        logits = jnp.where(mask, logits, -1e30)
+    return constrain(logits, ("batch", "seq", "vocab"))
+
+
+def forward(cfg: ModelConfig, params: Dict, batch: Dict
+            ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Training/eval forward.  Returns (logits (B,S,V) fp32, aux_loss)."""
+    if cfg.block == "encdec":
+        enc_out = encode(params["encdec"], batch["audio_frames"], cfg)
+        x = _embed_inputs(cfg, params, batch)
+        s = x.shape[1]
+        x = x + _sinusoidal(jnp.arange(s), cfg.d_model, x.dtype)[None]
+        x, _ = decode_stack(params["encdec"], x, cfg,
+                            jnp.arange(s), None, enc_out)
+        return _logits(cfg, params, x), jnp.zeros((), jnp.float32)
+
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    x, _, aux = stack_apply(params["stack"], x, cfg, jnp.arange(s), None)
+    return _logits(cfg, params, x), aux
+
+
+def loss_fn(cfg: ModelConfig, params: Dict, batch: Dict
+            ) -> Tuple[jnp.ndarray, Dict[str, jnp.ndarray]]:
+    logits, aux = forward(cfg, params, batch)
+    labels = batch["labels"]
+    logz = jax.scipy.special.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    total = loss + aux
+    return total, {"loss": loss, "aux_loss": aux,
+                   "tokens": jnp.sum(mask)}
+
+
+# --------------------------------------------------------------------------
+# inference: prefill + decode
+# --------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch_size: int, max_len: int):
+    if cfg.block == "encdec":
+        return encdec_init_cache(cfg, batch_size, max_len)
+    return stack_init_cache(cfg, batch_size, max_len)
+
+
+def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache
+            ) -> Tuple[jnp.ndarray, Any]:
+    """Run the prompt through the model, filling the cache.
+    Returns (last-token logits (B, V), cache)."""
+    if cfg.block == "encdec":
+        enc_out = encode(params["encdec"], batch["audio_frames"], cfg)
+        x = _embed_inputs(cfg, params, batch)
+        s = x.shape[1]
+        x = x + _sinusoidal(jnp.arange(s), cfg.d_model, x.dtype)[None]
+        x, new_cache = decode_stack(params["encdec"], x, cfg,
+                                    jnp.arange(s), cache, enc_out)
+        return _logits(cfg, params, x[:, -1:])[:, 0], new_cache
+
+    x = _embed_inputs(cfg, params, batch)
+    s = x.shape[1]
+    x, new_cache, _ = stack_apply(params["stack"], x, cfg,
+                                  jnp.arange(s), cache)
+    return _logits(cfg, params, x[:, -1:])[:, 0], new_cache
+
+
+def _cache_pos(cfg: ModelConfig, cache) -> jnp.ndarray:
+    if cfg.block == "encdec":
+        return cache.self_kv.pos[0]
+    if cfg.block in ("dense", "moe"):
+        return cache.pos[0]
+    if cfg.block == "mamba2_hybrid":
+        return cache["attn"].pos[0]
+    return None  # mamba1: position-free
+
+
+def decode_step(cfg: ModelConfig, params: Dict, tokens: jnp.ndarray, cache
+                ) -> Tuple[jnp.ndarray, Any]:
+    """One decode step.  tokens: (B, 1).  Returns (logits (B, V), cache)."""
+    x = jnp.take(params["embed"], tokens, axis=0)
+    pos0 = _cache_pos(cfg, cache)
+    positions = (jnp.arange(1) if pos0 is None
+                 else pos0 + jnp.arange(tokens.shape[1]))
+    if cfg.block == "encdec":
+        x = x + _sinusoidal(positions, cfg.d_model, x.dtype)[None]
+        x, new_cache = decode_stack(params["encdec"], x, cfg, positions,
+                                    cache, None)
+        return _logits(cfg, params, x)[:, -1], new_cache
+    x, new_cache, _ = stack_apply(params["stack"], x, cfg, positions, cache)
+    return _logits(cfg, params, x)[:, -1], new_cache

@@ -1,0 +1,208 @@
+"""Mixture-of-Experts FFN with top-k routing and capacity-bounded scatter
+dispatch, expert-parallel over the 'model' mesh axis.
+
+Dispatch shape discipline (learned the hard way — see EXPERIMENTS.md §Perf):
+nothing larger than (T, D) or (E, cap, D) is ever materialized.  The k
+routing slots are processed as k separate (T, D) scatter/gathers instead of
+one (T·k, D) flattened tensor — at kimi-k2 scale (T·k = 8.4M, D = 7168) the
+flattened form cost 240GB/device in fp32 cotangents.  Assignment ranks come
+from one argsort over (T·k,) int32 (cheap); the load-balance loss uses
+bincount, never a (T, k, E) one-hot.
+
+This is the TPU-native face of the paper's P axis at pod scale: *which
+tensor dimension (experts / capacity slots) is spatially partitioned* is a
+mapping choice, constrained here to EP='model', slots='data'.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from jax.sharding import PartitionSpec as P
+
+from ..dist.api import constrain, current_rules
+from .config import ModelConfig
+from .layers import activate, dense_init, is_gated
+
+
+def moe_init(key, cfg: ModelConfig) -> Dict:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.n_experts
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": dense_init(ks[0], d, e, jnp.float32),
+        "w_gate": (jax.random.normal(ks[1], (e, d, f)) * d ** -0.5
+                   ).astype(cfg.jdtype),
+        "w_down": (jax.random.normal(ks[2], (e, f, d)) * f ** -0.5
+                   ).astype(cfg.jdtype),
+    }
+    if is_gated(cfg.act):
+        p["w_up"] = (jax.random.normal(ks[3], (e, d, f)) * d ** -0.5
+                     ).astype(cfg.jdtype)
+    return p
+
+
+def route_topk(router: jnp.ndarray, xt: jnp.ndarray, cfg: ModelConfig
+               ) -> Tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Returns (weights (T,k) fp32 normalized, experts (T,k) int32, aux)."""
+    E, k = cfg.n_experts, cfg.top_k
+    logits = jnp.einsum("td,de->te", xt.astype(jnp.float32), router)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w_topk, experts = jax.lax.top_k(probs, k)
+    w_topk = w_topk / jnp.maximum(w_topk.sum(-1, keepdims=True), 1e-9)
+    # Switch-style load-balance loss via bincount (no (T,k,E) one-hot)
+    counts = jnp.bincount(experts.reshape(-1), length=E).astype(jnp.float32)
+    density = counts / jnp.maximum(counts.sum(), 1.0)
+    aux = E * jnp.sum(density * probs.mean(0)) * cfg.router_aux_coef
+    return w_topk, experts, aux
+
+
+def assignment_ranks(experts: jnp.ndarray, E: int) -> jnp.ndarray:
+    """Rank of each (token, slot) assignment within its expert: (T, k) int32.
+    One argsort over (T·k,) int32 — indices only, never token features."""
+    T, k = experts.shape
+    e_flat = experts.reshape(-1)
+    sort_idx = jnp.argsort(e_flat)                       # stable
+    e_sorted = e_flat[sort_idx]
+    counts = jnp.bincount(e_flat, length=E)
+    starts = jnp.cumsum(counts) - counts
+    pos_sorted = jnp.arange(T * k) - starts[e_sorted]
+    pos_flat = jnp.zeros((T * k,), jnp.int32).at[sort_idx].set(
+        pos_sorted.astype(jnp.int32))
+    return pos_flat.reshape(T, k)
+
+
+def _expert_ffn(params: Dict, buf: jnp.ndarray, cfg: ModelConfig
+                ) -> jnp.ndarray:
+    """buf: (E?, cap, D) -> (E?, cap, D) through the stacked expert MLPs."""
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = (jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+          if is_gated(cfg.act) else None)
+    h = activate(cfg.act, g, up)
+    return jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+
+
+def moe_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig
+              ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Dispatch: shard_map all-to-all EP when a mesh context is active and
+    shapes allow (training at scale); pure-jit scatter path otherwise
+    (CPU tests, decode steps with tiny T)."""
+    ctx = current_rules()
+    if ctx is not None:
+        mesh, rules = ctx
+        tp_axis = rules.get("expert")
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+        tp = sizes.get(tp_axis, 1) if isinstance(tp_axis, str) else 1
+        dp_axes = rules.get("batch")
+        S = x.shape[1]
+        if (tp > 1 and cfg.n_experts % tp == 0 and S % tp == 0
+                and x.shape[0] * S >= 16 * tp):
+            return _moe_block_a2a(params, x, cfg, mesh, dp_axes, tp_axis, tp)
+    return _moe_block_jit(params, x, cfg)
+
+
+def _moe_block_a2a(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                   mesh, dp_axes, tp_axis: str, tp: int
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Expert parallelism via shard_map: tokens sharded (batch x seq) over
+    (dp x tp); each shard ranks its local tokens, scatters into per-expert
+    send buffers, all_to_all over the model axis routes them to the shard
+    owning the expert, FFN runs on (E/tp, tp*cap, D), reverse all_to_all +
+    local combine.  No (T, D) tensor is ever replicated — this collective
+    schedule is what the pure-jit scatter could not express (SPMD replicated
+    the dispatch gathers; see EXPERIMENTS.md §Perf kimi iteration 1)."""
+    from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    E_loc = E // tp
+
+    dp = dp_axes if dp_axes else None
+    x_spec = P(dp, tp_axis, None)           # batch over dp, seq over tp
+    w_spec = P(tp_axis, None, None)         # experts over tp (FSDP gathered)
+    gated = is_gated(cfg.act)
+
+    def local_fn(router, w_gate, w_up, w_down, x_loc):
+        lp = {"router": router, "w_gate": w_gate, "w_down": w_down}
+        if gated:
+            lp["w_up"] = w_up
+        b_loc, s_loc, _ = x_loc.shape
+        t_loc = b_loc * s_loc
+        xt = x_loc.reshape(t_loc, D)
+        w_topk, experts, aux = route_topk(router, xt, cfg)
+        ranks = assignment_ranks(experts, E)
+        cap = max(8, -(-int(cfg.capacity_factor * k * t_loc / E) // 8) * 8)
+
+        send = jnp.zeros((E, cap, D), x.dtype)
+        for j in range(k):
+            send = send.at[experts[:, j], ranks[:, j]].add(xt, mode="drop")
+        # route chunks to expert owners: (E, cap, D) -> (E/tp, tp*cap, D)
+        recv = jax.lax.all_to_all(send, tp_axis, split_axis=0,
+                                  concat_axis=1, tiled=True)
+        y = _expert_ffn(lp, recv, cfg)
+        # route results back: (E/tp, tp*cap, D) -> (E, cap, D)
+        y_buf = jax.lax.all_to_all(y, tp_axis, split_axis=1,
+                                   concat_axis=0, tiled=True)
+        out = jnp.zeros((t_loc, D), x.dtype)
+        for j in range(k):
+            kept = ranks[:, j] < cap
+            safe = jnp.minimum(ranks[:, j], cap - 1)
+            w_j = (w_topk[:, j] * kept).astype(x.dtype)
+            out = out + w_j[:, None] * y_buf[experts[:, j], safe]
+        dpt = dp if isinstance(dp, tuple) else ((dp,) if dp else ())
+        aux = jax.lax.pmean(aux, tuple(a for a in dpt + (tp_axis,) if a))
+        return out.reshape(b_loc, s_loc, D), aux
+
+    w_up = params["w_up"] if gated else jnp.zeros((), x.dtype)
+    fn = shard_map(
+        local_fn, mesh=mesh,
+        in_specs=(P(), w_spec, w_spec if gated else P(), w_spec, x_spec),
+        out_specs=(x_spec, P()),
+        check_rep=False)
+    out, aux = fn(params["router"], params["w_gate"], w_up,
+                  params["w_down"], x)
+    return constrain(out, ("batch", "seq", None)), aux
+
+
+def _moe_block_jit(params: Dict, x: jnp.ndarray, cfg: ModelConfig
+                   ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Pure-jit scatter dispatch (small T / no mesh context)."""
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    T = B * S
+    xt = constrain(x.reshape(T, D), ("batch", None))
+
+    w_topk, experts, aux = route_topk(params["router"], xt, cfg)
+    ranks = assignment_ranks(experts, E)                 # (T, k)
+
+    # capacity rounded up to 512 so the slot dim shards over the dp axes
+    cap = max(1, int(cfg.capacity_factor * k * T / E))
+    cap = -(-cap // 512) * 512 if T >= 4096 else cap
+
+    # ---- dispatch: k scatters of (T, D) — overflow ranks drop ---------------
+    buf = jnp.zeros((E, cap, D), x.dtype)
+    for j in range(k):
+        buf = buf.at[experts[:, j], ranks[:, j]].add(xt, mode="drop")
+    buf = constrain(buf, ("expert", "batch", None))      # (E/tp, cap/dp, D)
+
+    # ---- expert FFN (batched over experts; EP shards dim 0) -----------------
+    g = jnp.einsum("ecd,edf->ecf", buf, params["w_gate"])
+    up = (jnp.einsum("ecd,edf->ecf", buf, params["w_up"])
+          if is_gated(cfg.act) else None)
+    h = activate(cfg.act, g, up)
+    h = constrain(h, ("expert", "batch", None))
+    y_buf = jnp.einsum("ecf,efd->ecd", h, params["w_down"])
+    y_buf = constrain(y_buf, ("expert", "batch", None))
+
+    # ---- combine: k gathers of (T, D) ---------------------------------------
+    out = jnp.zeros((T, D), x.dtype)
+    for j in range(k):
+        kept = (ranks[:, j] < cap)
+        safe = jnp.minimum(ranks[:, j], cap - 1)
+        y_j = y_buf[experts[:, j], safe]
+        y_j = constrain(y_j, ("batch", None))
+        w_j = (w_topk[:, j] * kept).astype(x.dtype)
+        out = out + w_j[:, None] * y_j
+    out = constrain(out, ("batch", None))
+    return out.reshape(B, S, D), aux

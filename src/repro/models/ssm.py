@@ -1,0 +1,270 @@
+"""Selective state-space blocks: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Both reduce to the diagonal linear recurrence
+
+    h_t = a_t * h_{t-1} + b_t ,   y_t = <C_t, h_t> + D * x_t
+
+with per-(channel, state) decay `a_t` (Mamba-1) or per-head scalar decay
+(Mamba-2).  Training uses a chunked scan: sequential `lax.scan` over chunks
+carrying the state, associative scan inside each chunk — the same blocking the
+Pallas kernel (`repro.kernels.mamba_scan`) uses, with chunk length = the
+kernel's T axis.  Decode carries (conv_state, ssm_state) and is O(1)/token,
+which is what makes `long_500k` runnable for the SSM/hybrid archs.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain
+from .config import ModelConfig
+from .layers import dense_init
+
+
+class SSMCache(NamedTuple):
+    conv: jnp.ndarray   # (B, d_conv-1, d_inner) rolling conv window
+    state: jnp.ndarray  # (B, d_inner, N) or (B, H, P, N) recurrent state
+
+
+# --------------------------------------------------------------------------
+# shared: chunked diagonal linear recurrence
+# --------------------------------------------------------------------------
+
+def chunked_linear_scan(a: jnp.ndarray, b: jnp.ndarray, h0: jnp.ndarray,
+                        chunk: int, unroll: bool = False
+                        ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """h_t = a_t ⊙ h_{t-1} + b_t along axis 1 (seq).
+
+    a, b: (B, L, ...) broadcast-compatible; h0: (B, ...).
+    Returns (h_all: (B, L, ...), h_last: (B, ...)).
+    """
+    B, L = b.shape[0], b.shape[1]
+    chunk = max(1, min(chunk, L))
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+    a = a.reshape((B, n_chunks, chunk) + a.shape[2:])
+    b = b.reshape((B, n_chunks, chunk) + b.shape[2:])
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def chunk_step(h, ab):
+        ac, bc = ab  # (B, chunk, ...)
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_in = h[:, None]
+        h_all = a_cum * h_in + b_cum
+        return h_all[:, -1], h_all
+
+    h_last, h_chunks = jax.lax.scan(
+        chunk_step, h0, (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0)),
+        unroll=n_chunks if unroll else 1)
+    h_all = jnp.moveaxis(h_chunks, 0, 1).reshape((B, n_chunks * chunk)
+                                                 + h0.shape[1:])
+    return h_all[:, :L], h_last
+
+
+def chunked_selective_scan(a: jnp.ndarray, b: jnp.ndarray, c: jnp.ndarray,
+                           h0: jnp.ndarray, chunk: int,
+                           unroll: bool = False
+                           ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Like chunked_linear_scan but contracts the state against C *inside*
+    each chunk: y_t = <h_t, C_t> over the trailing state dim.  The full
+    h_all (B, L, ..., N) is never materialized — only per-chunk transients —
+    which is exactly what the Pallas kernel does in VMEM (and cuts the
+    dominant HBM-traffic term of the SSM archs; see EXPERIMENTS.md §Perf).
+
+    a, b: (B, L, ..., N); c: (B, L, N); h0: (B, ..., N).
+    Returns (y: (B, L, ...), h_last)."""
+    B, L = b.shape[0], b.shape[1]
+    chunk = max(1, min(chunk, L))
+    n_chunks = -(-L // chunk)
+    pad = n_chunks * chunk - L
+    if pad:
+        a = jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2),
+                    constant_values=1.0)
+        b = jnp.pad(b, [(0, 0), (0, pad)] + [(0, 0)] * (b.ndim - 2))
+        c = jnp.pad(c, [(0, 0), (0, pad), (0, 0)])
+    a = a.reshape((B, n_chunks, chunk) + a.shape[2:])
+    b = b.reshape((B, n_chunks, chunk) + b.shape[2:])
+    c = c.reshape((B, n_chunks, chunk, c.shape[-1]))
+
+    def combine(x, y):
+        ax, bx = x
+        ay, by = y
+        return ax * ay, ay * bx + by
+
+    def chunk_step(h, abc):
+        ac, bc, cc = abc
+        a_cum, b_cum = jax.lax.associative_scan(combine, (ac, bc), axis=1)
+        h_all = a_cum * h[:, None] + b_cum          # transient (chunk-local)
+        y = jnp.einsum("bl...n,bln->bl...", h_all, cc)
+        return h_all[:, -1], y
+
+    h_last, y_chunks = jax.lax.scan(
+        chunk_step, h0,
+        (jnp.moveaxis(a, 1, 0), jnp.moveaxis(b, 1, 0),
+         jnp.moveaxis(c, 1, 0)),
+        unroll=n_chunks if unroll else 1)
+    y = jnp.moveaxis(y_chunks, 0, 1).reshape((B, n_chunks * chunk)
+                                             + y_chunks.shape[3:])
+    return y[:, :L], h_last
+
+
+def causal_conv1d(x: jnp.ndarray, w: jnp.ndarray, bias: jnp.ndarray,
+                  prev: Optional[jnp.ndarray] = None
+                  ) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv.  x: (B, L, D); w: (K, D); prev: (B, K-1, D).
+    Returns (y, new_prev)."""
+    K = w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([prev, x], axis=1)
+    # windowed sum: y[t] = sum_k w[k] * xp[t + k]
+    y = sum(xp[:, k:k + x.shape[1], :] * w[k] for k in range(K))
+    new_prev = xp[:, -(K - 1):, :] if K > 1 else prev
+    return y + bias, new_prev
+
+
+# --------------------------------------------------------------------------
+# Mamba-1 (falcon-mamba-7b)
+# --------------------------------------------------------------------------
+
+def mamba1_init(key, cfg: ModelConfig) -> Dict:
+    d, di, ns, r = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.dtr
+    ks = jax.random.split(key, 6)
+    a = jnp.tile(jnp.arange(1, ns + 1, dtype=jnp.float32)[None, :], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.jdtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.d_conv, di)) * 0.1
+                   ).astype(cfg.jdtype),
+        "conv_b": jnp.zeros((di,), cfg.jdtype),
+        "x_proj": dense_init(ks[2], di, r + 2 * ns, cfg.jdtype),
+        "dt_proj": dense_init(ks[3], r, di, cfg.jdtype),
+        "dt_bias": jnp.zeros((di,), cfg.jdtype),
+        "A_log": jnp.log(a),                       # (di, ns) fp32
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, cfg.jdtype),
+    }
+
+
+def mamba1_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 cache: Optional[SSMCache] = None
+                 ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    """x: (B, L, D) -> (B, L, D); cache makes it a stateful step."""
+    B, L, _ = x.shape
+    di, ns, r = cfg.d_inner, cfg.ssm_state, cfg.dtr
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+
+    prev = cache.conv if cache is not None else None
+    xin, new_conv = causal_conv1d(xin, params["conv_w"], params["conv_b"],
+                                  prev)
+    xin = constrain(jax.nn.silu(xin), ("batch", None, "inner"))
+
+    dbc = jnp.einsum("ble,ef->blf", xin, params["x_proj"])
+    dt, Bmat, Cmat = jnp.split(dbc, [r, r + ns], axis=-1)
+    dt = jax.nn.softplus(jnp.einsum("blr,re->ble", dt, params["dt_proj"])
+                         + params["dt_bias"])                     # (B,L,di)
+    A = -jnp.exp(params["A_log"])                                 # (di,ns)
+
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf[..., None] * A[None, None])                   # (B,L,di,ns)
+    b = (dtf * xin.astype(jnp.float32))[..., None] \
+        * Bmat.astype(jnp.float32)[:, :, None, :]                 # (B,L,di,ns)
+    a = constrain(a, ("batch", None, "inner", None))
+    b = constrain(b, ("batch", None, "inner", None))
+
+    h0 = (cache.state if cache is not None
+          else jnp.zeros((B, di, ns), jnp.float32))
+    y, h_last = chunked_selective_scan(a, b, Cmat.astype(jnp.float32), h0,
+                                       cfg.ssm_chunk,
+                                       unroll=cfg.unroll_scans)  # (B,L,di)
+    y = constrain(y, ("batch", None, "inner"))
+    y = (y + params["D"][None, None] * xin.astype(jnp.float32)
+         ).astype(x.dtype)
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    new_cache = (SSMCache(conv=new_conv, state=h_last)
+                 if cache is not None else None)
+    return out, new_cache
+
+
+# --------------------------------------------------------------------------
+# Mamba-2 (zamba2): per-head scalar decay, B/C shared across head dims
+# --------------------------------------------------------------------------
+
+def mamba2_init(key, cfg: ModelConfig) -> Dict:
+    d, di, ns = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    H = cfg.n_ssm_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * di, cfg.jdtype),
+        "bc_proj": dense_init(ks[1], d, 2 * ns, cfg.jdtype),
+        "dt_proj": dense_init(ks[2], d, H, cfg.jdtype),
+        "dt_bias": jnp.zeros((H,), cfg.jdtype),
+        "conv_w": (jax.random.normal(ks[3], (cfg.d_conv, di)) * 0.1
+                   ).astype(cfg.jdtype),
+        "conv_b": jnp.zeros((di,), cfg.jdtype),
+        "A_log": jnp.zeros((H,), jnp.float32),
+        "D": jnp.ones((H,), jnp.float32),
+        "out_proj": dense_init(ks[4], di, d, cfg.jdtype),
+    }
+
+
+def mamba2_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 cache: Optional[SSMCache] = None
+                 ) -> Tuple[jnp.ndarray, Optional[SSMCache]]:
+    B, L, _ = x.shape
+    di, ns = cfg.d_inner, cfg.ssm_state
+    H, P = cfg.n_ssm_heads, cfg.mamba2_headdim
+
+    xz = jnp.einsum("bld,de->ble", x, params["in_proj"])
+    xin, z = jnp.split(xz, 2, axis=-1)
+    prev = cache.conv if cache is not None else None
+    xin, new_conv = causal_conv1d(xin, params["conv_w"], params["conv_b"],
+                                  prev)
+    xin = constrain(jax.nn.silu(xin), ("batch", None, "inner"))
+
+    bc = jnp.einsum("bld,dn->bln", x, params["bc_proj"])
+    Bmat, Cmat = jnp.split(bc, 2, axis=-1)                       # (B,L,ns)
+    dt = jax.nn.softplus(jnp.einsum("bld,dh->blh", x, params["dt_proj"])
+                         + params["dt_bias"])                    # (B,L,H)
+    A = -jnp.exp(params["A_log"])                                # (H,)
+
+    xh = xin.reshape(B, L, H, P).astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    a = jnp.exp(dtf * A[None, None])[..., None, None]            # (B,L,H,1,1)
+    b = (dtf[..., None, None] * xh[..., :, None]
+         * Bmat.astype(jnp.float32)[:, :, None, None, :])        # (B,L,H,P,ns)
+    b = constrain(b, ("batch", None, "inner", None, None))
+
+    h0 = (cache.state if cache is not None
+          else jnp.zeros((B, H, P, ns), jnp.float32))
+    y, h_last = chunked_selective_scan(a, b, Cmat.astype(jnp.float32), h0,
+                                       cfg.ssm_chunk,
+                                       unroll=cfg.unroll_scans)  # (B,L,H,P)
+    y = constrain(y, ("batch", None, "inner", None))
+    y = y + params["D"][None, None, :, None] * xh
+    y = y.reshape(B, L, di).astype(x.dtype) * jax.nn.silu(z)
+    out = jnp.einsum("ble,ed->bld", y, params["out_proj"])
+    new_cache = (SSMCache(conv=new_conv, state=h_last)
+                 if cache is not None else None)
+    return out, new_cache
+
+
+def init_ssm_cache(batch: int, cfg: ModelConfig) -> SSMCache:
+    if cfg.block == "mamba1":
+        state = jnp.zeros((batch, cfg.d_inner, cfg.ssm_state), jnp.float32)
+    else:
+        state = jnp.zeros((batch, cfg.n_ssm_heads, cfg.mamba2_headdim,
+                           cfg.ssm_state), jnp.float32)
+    conv = jnp.zeros((batch, cfg.d_conv - 1, cfg.d_inner), cfg.jdtype)
+    return SSMCache(conv=conv, state=state)

@@ -1,0 +1,433 @@
+"""Layer-stack composition: dense / MoE / Mamba / hybrid / enc-dec stacks.
+
+Homogeneous stacks use ``lax.scan`` over stacked layer params (fast compiles
+at 61+ layers, natural FSDP prefetch overlap); the Zamba2 hybrid scans over
+groups of `hybrid_period` Mamba-2 layers followed by one *shared* attention
+block (same weights every invocation).  ``remat=True`` wraps the per-layer
+body in ``jax.checkpoint`` (full remat — the memory side of the paper's T
+axis trade-off).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.api import constrain
+from .attention import KVCache, attention_block, attn_init, init_kv_cache
+from .config import ModelConfig
+from .layers import activate, apply_norm, dense_init, is_gated, norm_init
+from .moe import moe_block, moe_init
+from .ssm import (SSMCache, init_ssm_cache, mamba1_block, mamba2_block,
+                  mamba1_init, mamba2_init)
+
+
+# --------------------------------------------------------------------------
+# MLP
+# --------------------------------------------------------------------------
+
+def mlp_init(key, cfg: ModelConfig, d: Optional[int] = None,
+             f: Optional[int] = None) -> Dict:
+    d = d or cfg.d_model
+    f = f or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    p = {"w_gate": dense_init(ks[0], d, f, cfg.jdtype),
+         "w_down": dense_init(ks[1], f, d, cfg.jdtype)}
+    if is_gated(cfg.act):
+        p["w_up"] = dense_init(ks[2], d, f, cfg.jdtype)
+    return p
+
+
+def mlp_block(params: Dict, x: jnp.ndarray, cfg: ModelConfig) -> jnp.ndarray:
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    up = (jnp.einsum("bsd,df->bsf", x, params["w_up"])
+          if is_gated(cfg.act) else None)
+    h = activate(cfg.act, g, up)
+    h = constrain(h, ("batch", "seq", "ff"))
+    return jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+
+
+# --------------------------------------------------------------------------
+# per-layer inits
+# --------------------------------------------------------------------------
+
+def dense_layer_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+            "attn": attn_init(k1, cfg),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+            "mlp": mlp_init(k2, cfg)}
+
+
+def moe_layer_init(key, cfg: ModelConfig) -> Dict:
+    k1, k2 = jax.random.split(key)
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+            "attn": attn_init(k1, cfg),
+            "ln2": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+            "moe": moe_init(k2, cfg)}
+
+
+def mamba_layer_init(key, cfg: ModelConfig) -> Dict:
+    init = mamba1_init if cfg.block == "mamba1" else mamba2_init
+    return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+            "mamba": init(key, cfg)}
+
+
+# --------------------------------------------------------------------------
+# per-layer applies  (x, cache) -> (x, new_cache, aux)
+# --------------------------------------------------------------------------
+
+def dense_layer(params, x, cfg: ModelConfig, positions, cache):
+    h = apply_norm(cfg.norm, x, params["ln1"])
+    a, new_cache = attention_block(params["attn"], h, cfg,
+                                   positions=positions, cache=cache)
+    x = constrain(x + a, ("batch", "seq", None))
+    h = apply_norm(cfg.norm, x, params["ln2"])
+    x = constrain(x + mlp_block(params["mlp"], h, cfg),
+                  ("batch", "act_seq", None))
+    return x, new_cache, jnp.zeros((), jnp.float32)
+
+
+def moe_layer(params, x, cfg: ModelConfig, positions, cache):
+    h = apply_norm(cfg.norm, x, params["ln1"])
+    a, new_cache = attention_block(params["attn"], h, cfg,
+                                   positions=positions, cache=cache)
+    x = constrain(x + a, ("batch", "seq", None))
+    h = apply_norm(cfg.norm, x, params["ln2"])
+    m, aux = moe_block(params["moe"], h, cfg)
+    return constrain(x + m, ("batch", "act_seq", None)), new_cache, aux
+
+
+def mamba_layer(params, x, cfg: ModelConfig, positions, cache):
+    del positions
+    h = apply_norm(cfg.norm, x, params["ln1"])
+    block = mamba1_block if cfg.block == "mamba1" else mamba2_block
+    m, new_cache = block(params["mamba"], h, cfg, cache)
+    return (constrain(x + m, ("batch", "act_seq", None)), new_cache,
+            jnp.zeros((), jnp.float32))
+
+
+_LAYER = {"dense": (dense_layer_init, dense_layer),
+          "moe": (moe_layer_init, moe_layer),
+          "mamba1": (mamba_layer_init, mamba_layer),
+          "mamba2_hybrid": (mamba_layer_init, mamba_layer)}
+
+
+# --------------------------------------------------------------------------
+# stacks
+# --------------------------------------------------------------------------
+
+def stack_init(key, cfg: ModelConfig) -> Dict:
+    init_fn, _ = _LAYER[cfg.block]
+    keys = jax.random.split(key, cfg.n_layers + 1)
+    layer_keys = keys[:cfg.n_layers]
+    stacked = jax.vmap(lambda k: init_fn(k, cfg))(layer_keys)
+    p: Dict[str, Any] = {"layers": stacked}
+    if cfg.block == "mamba2_hybrid":
+        p["shared"] = dense_layer_init(keys[-1], cfg)
+    return p
+
+
+def _maybe_remat(fn, cfg: ModelConfig):
+    return jax.checkpoint(fn) if cfg.remat else fn
+
+
+def stack_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                positions: jnp.ndarray, caches=None
+                ) -> Tuple[jnp.ndarray, Any, jnp.ndarray]:
+    """Apply the whole layer stack.  caches: stacked cache pytree or None.
+    Returns (x, new_caches, aux_sum)."""
+    _, layer_fn = _LAYER[cfg.block]
+
+    if cfg.block == "mamba2_hybrid":
+        return _hybrid_apply(params, x, cfg, positions, caches)
+
+    def body(carry, xs):
+        h = carry
+        lp, cache = xs
+        h, new_cache, aux = layer_fn(lp, h, cfg, positions, cache)
+        return h, (new_cache, aux)
+
+    body = _maybe_remat(body, cfg)
+
+    if cfg.scan_layers:
+        xs = (params["layers"], caches)
+        x, (new_caches, auxs) = jax.lax.scan(body, x, xs)
+        return x, new_caches, jnp.sum(auxs)
+    # unrolled (dry-run cost analysis: while-loop bodies are counted once by
+    # HLO cost analysis, so exact FLOP counting needs unrolled layers)
+    new_caches, aux_sum = [], jnp.zeros((), jnp.float32)
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda a: a[i], params["layers"])
+        cache = (None if caches is None
+                 else jax.tree.map(lambda a: a[i], caches))
+        if cfg.remat and cache is None:
+            x, nc, aux = jax.checkpoint(
+                lambda lp_, h_: layer_fn(lp_, h_, cfg, positions, None)
+            )(lp, x)
+        else:
+            x, nc, aux = layer_fn(lp, x, cfg, positions, cache)
+        new_caches.append(nc)
+        aux_sum = aux_sum + aux
+    if caches is not None:
+        new_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *new_caches)
+    else:
+        new_caches = None
+    return x, new_caches, aux_sum
+
+
+def _hybrid_apply(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                  positions: jnp.ndarray, caches=None):
+    """Zamba2: scan over groups of `hybrid_period` mamba layers, each group
+    followed by the shared attention block (weights reused every time)."""
+    period = cfg.hybrid_period
+    n_groups = cfg.n_layers // period
+    assert n_groups * period == cfg.n_layers, \
+        "hybrid stack requires n_layers % hybrid_period == 0"
+
+    # reshape stacked mamba params (L, ...) -> (G, period, ...)
+    def regroup(a):
+        return a.reshape((n_groups, period) + a.shape[1:])
+
+    mamba_params = jax.tree.map(regroup, params["layers"])
+    shared = params["shared"]
+
+    def inner(h, xs):
+        lp, cache = xs
+        h, new_cache, aux = mamba_layer(lp, h, cfg, positions, cache)
+        return h, (new_cache, aux)
+
+    # nested remat: per-layer checkpoints inside the (checkpointed) group,
+    # so backward re-materializes ONE mamba layer's scan operands at a time
+    # instead of all `hybrid_period` layers' (B,L,H,P,N) tensors at once
+    inner = _maybe_remat(inner, cfg)
+
+    def group_body(carry, xs):
+        h = carry
+        gp, mcache, acache = xs
+        h, (new_mcache, auxs) = jax.lax.scan(inner, h, (gp, mcache))
+        h, new_acache, aux2 = dense_layer(shared, h, cfg, positions, acache)
+        return h, (new_mcache, new_acache, jnp.sum(auxs) + aux2)
+
+    mcaches = caches["mamba"] if caches is not None else None
+    acaches = caches["attn"] if caches is not None else None
+
+    if cfg.scan_layers:
+        body = _maybe_remat(group_body, cfg)
+        x, (new_m, new_a, auxs) = jax.lax.scan(
+            body, x, (mamba_params, mcaches, acaches))
+        new_caches = (None if caches is None
+                      else {"mamba": new_m, "attn": new_a})
+        return x, new_caches, jnp.sum(auxs)
+
+    # unrolled (dry-run cost analysis)
+    new_ms, new_as, aux_sum = [], [], jnp.zeros((), jnp.float32)
+    for g in range(n_groups):
+        h = x
+        group_m = []
+        for j in range(period):
+            lp = jax.tree.map(lambda a: a[g, j], mamba_params)
+            mc = (None if mcaches is None
+                  else jax.tree.map(lambda a: a[g, j], mcaches))
+            h, nmc, aux = mamba_layer(lp, h, cfg, positions, mc)
+            group_m.append(nmc)
+            aux_sum = aux_sum + aux
+        ac = (None if acaches is None
+              else jax.tree.map(lambda a: a[g], acaches))
+        h, nac, aux2 = dense_layer(shared, h, cfg, positions, ac)
+        aux_sum = aux_sum + aux2
+        x = h
+        new_ms.append(group_m)
+        new_as.append(nac)
+    if caches is None:
+        return x, None, aux_sum
+    new_m = jax.tree.map(
+        lambda *gs: jnp.stack(gs),
+        *[jax.tree.map(lambda *js: jnp.stack(js), *g) for g in new_ms])
+    new_a = jax.tree.map(lambda *xs: jnp.stack(xs), *new_as)
+    return x, {"mamba": new_m, "attn": new_a}, aux_sum
+
+
+def stack_init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    """Stacked decode caches matching stack_apply's expectations."""
+    if cfg.block in ("dense", "moe"):
+        one = init_kv_cache(batch, max_len, cfg)
+        return jax.tree.map(
+            lambda a: jnp.broadcast_to(a, (cfg.n_layers,) + a.shape).copy()
+            if a.ndim else jnp.zeros((cfg.n_layers,), a.dtype), one)
+    if cfg.block == "mamba1":
+        one = init_ssm_cache(batch, cfg)
+        return jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), one)
+    if cfg.block == "mamba2_hybrid":
+        period = cfg.hybrid_period
+        n_groups = cfg.n_layers // period
+        ssm_one = init_ssm_cache(batch, cfg)
+        mcache = jax.tree.map(
+            lambda a: jnp.zeros((n_groups, period) + a.shape, a.dtype),
+            ssm_one)
+        kv_one = init_kv_cache(batch, max_len, cfg)
+        acache = jax.tree.map(
+            lambda a: (jnp.zeros((n_groups,) + a.shape, a.dtype)
+                       if a.ndim else jnp.zeros((n_groups,), a.dtype)),
+            kv_one)
+        return {"mamba": mcache, "attn": acache}
+    raise ValueError(cfg.block)
+
+
+# --------------------------------------------------------------------------
+# encoder-decoder (whisper)
+# --------------------------------------------------------------------------
+
+class EncDecCache(NamedTuple):
+    self_kv: Any          # stacked KVCache over decoder layers
+    cross_k: jnp.ndarray  # (Ld, B, S_enc, n_kv, hd)
+    cross_v: jnp.ndarray
+    ready: jnp.ndarray    # () bool-ish int — cross KV computed
+
+
+def encdec_init(key, cfg: ModelConfig) -> Dict:
+    ks = jax.random.split(key, 4)
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.dec_layers)
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+                "attn": attn_init(k1, cfg),
+                "ln2": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+                "mlp": mlp_init(k2, cfg)}
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"ln1": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+                "self_attn": attn_init(k1, cfg),
+                "ln_x": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+                "cross_attn": attn_init(k2, cfg),
+                "ln2": norm_init(cfg.norm, cfg.d_model, cfg.jdtype),
+                "mlp": mlp_init(k3, cfg)}
+
+    return {"enc_layers": jax.vmap(enc_layer)(enc_keys),
+            "dec_layers": jax.vmap(dec_layer)(dec_keys),
+            "ln_enc": norm_init(cfg.norm, cfg.d_model, cfg.jdtype)}
+
+
+def _sinusoidal(positions: jnp.ndarray, d: int, dtype) -> jnp.ndarray:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half) / max(half - 1, 1)
+                    * jnp.log(10000.0))
+    ang = positions.astype(jnp.float32)[:, None] * freqs[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], -1).astype(dtype)
+
+
+def encode(params: Dict, frames: jnp.ndarray, cfg: ModelConfig
+           ) -> jnp.ndarray:
+    """frames: (B, S_enc, D) precomputed conv/mel stub embeddings."""
+    s = frames.shape[1]
+    x = frames + _sinusoidal(jnp.arange(s), cfg.d_model, frames.dtype)[None]
+    positions = jnp.arange(s)
+
+    def body(h, lp):
+        a, _ = attention_block(lp["attn"],
+                               apply_norm(cfg.norm, h, lp["ln1"]), cfg,
+                               positions=positions, causal=False)
+        h = h + a
+        h = h + mlp_block(lp["mlp"], apply_norm(cfg.norm, h, lp["ln2"]), cfg)
+        return h, None
+
+    body = _maybe_remat(body, cfg)
+    if cfg.scan_layers:
+        x, _ = jax.lax.scan(body, x, params["enc_layers"])
+    else:
+        for i in range(cfg.enc_layers):
+            lp = jax.tree.map(lambda a: a[i], params["enc_layers"])
+            x, _ = body(x, lp)
+    return apply_norm(cfg.norm, x, params["ln_enc"])
+
+
+def decode_stack(params: Dict, x: jnp.ndarray, cfg: ModelConfig,
+                 positions: jnp.ndarray, cache: Optional[EncDecCache],
+                 enc_out: Optional[jnp.ndarray]
+                 ) -> Tuple[jnp.ndarray, Optional[EncDecCache]]:
+    """Decoder stack; at prefill, enc_out is given and cross-KV is cached."""
+
+    def body(h, xs):
+        lp, kv_cache, cross_k, cross_v = xs
+        a, new_kv = attention_block(
+            lp["self_attn"], apply_norm(cfg.norm, h, lp["ln1"]), cfg,
+            positions=positions, cache=kv_cache)
+        h = h + a
+        hq = apply_norm(cfg.norm, h, lp["ln_x"])
+        if enc_out is not None:
+            # compute cross attention from encoder output; cache K/V
+            ca, _ = attention_block(lp["cross_attn"], hq, cfg,
+                                    positions=positions, causal=False,
+                                    xkv=enc_out)
+            b, se, _ = enc_out.shape
+            ck = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross_attn"]["wk"]
+                            ).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+            cv = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross_attn"]["wv"]
+                            ).reshape(b, se, cfg.n_kv_heads, cfg.hd)
+        else:
+            # reuse cached cross K/V
+            from .attention import multihead_attention
+            b, sq, _ = hq.shape
+            q = jnp.einsum("bsd,dh->bsh", hq, lp["cross_attn"]["wq"]
+                           ).reshape(b, sq, cfg.n_heads, cfg.hd)
+            o = multihead_attention(q, cross_k, cross_v, causal=False,
+                                    q_positions=positions, impl=cfg.attn_impl,
+                                    block_kv=cfg.attn_block_kv)
+            ca = jnp.einsum("bsh,hd->bsd",
+                            o.reshape(b, sq, cfg.n_heads * cfg.hd),
+                            lp["cross_attn"]["wo"])
+            ck, cv = cross_k, cross_v
+        h = h + ca
+        h = h + mlp_block(lp["mlp"], apply_norm(cfg.norm, h, lp["ln2"]), cfg)
+        return h, (new_kv, ck, cv)
+
+    if cache is not None:
+        if cfg.scan_layers:
+            xs = (params["dec_layers"], cache.self_kv, cache.cross_k,
+                  cache.cross_v)
+            x, (new_kv, ck, cv) = jax.lax.scan(body, x, xs)
+            return x, EncDecCache(self_kv=new_kv, cross_k=ck, cross_v=cv,
+                                  ready=jnp.ones((), jnp.int32))
+        outs = []
+        for i in range(cfg.dec_layers):
+            sl = jax.tree.map(lambda a: a[i],
+                              (params["dec_layers"], cache.self_kv,
+                               cache.cross_k, cache.cross_v))
+            x, out = body(x, sl)
+            outs.append(out)
+        new_kv, ck, cv = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+        return x, EncDecCache(self_kv=new_kv, cross_k=ck, cross_v=cv,
+                              ready=jnp.ones((), jnp.int32))
+    # no cache: training forward — python loop (whisper stacks are small)
+    b = x.shape[0]
+    dummy_k = jnp.zeros((b, 1, cfg.n_kv_heads, cfg.hd), x.dtype)
+    h = x
+
+    def train_body(h_, lp):
+        out, _ = body(h_, (lp, None, dummy_k, dummy_k))
+        return out
+
+    if cfg.remat:
+        train_body = jax.checkpoint(train_body)
+    for i in range(cfg.dec_layers):
+        lp = jax.tree.map(lambda a: a[i], params["dec_layers"])
+        h = train_body(h, lp)
+    return h, None
+
+
+def encdec_init_cache(cfg: ModelConfig, batch: int, max_len: int
+                      ) -> EncDecCache:
+    one = init_kv_cache(batch, max_len, cfg)
+    self_kv = jax.tree.map(
+        lambda a: (jnp.zeros((cfg.dec_layers,) + a.shape, a.dtype)
+                   if a.ndim else jnp.zeros((cfg.dec_layers,), a.dtype)), one)
+    ck = jnp.zeros((cfg.dec_layers, batch, cfg.n_audio_frames,
+                    cfg.n_kv_heads, cfg.hd), cfg.jdtype)
+    return EncDecCache(self_kv=self_kv, cross_k=ck, cross_v=ck,
+                       ready=jnp.zeros((), jnp.int32))

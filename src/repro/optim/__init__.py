@@ -1,0 +1,5 @@
+from .optimizers import (Optimizer, adafactor, adamw, opt_shardings,
+                         schedule_cosine, sgd)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "schedule_cosine",
+           "opt_shardings"]

@@ -1,0 +1,195 @@
+"""Optimizers (AdamW / Adafactor / SGD) with ZeRO-sharded states.
+
+States mirror the parameter pytree leaf-for-leaf, so FSDP parameter
+shardings apply verbatim (`opt_shardings`), except Adafactor's factored
+second moments, whose reduced axes drop from the spec.  Gradient clipping
+(global norm) and warmup-cosine schedules included.  1T-class models use
+Adafactor (factored second moment ≈ O(rows+cols) instead of O(rows·cols))
+— the difference between fitting and not fitting 16GB/chip (DESIGN.md §5).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[Any], Any]
+    update: Callable[[Any, Any, Any, jnp.ndarray], Tuple[Any, Any]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+    name: str = "opt"
+
+
+def schedule_cosine(base_lr: float, warmup: int = 100,
+                    total: int = 10_000, min_frac: float = 0.1
+                    ) -> Callable[[jnp.ndarray], jnp.ndarray]:
+    def lr(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(warmup, 1), 1.0)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = min_frac + (1 - min_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * warm * cos
+    return lr
+
+
+def _global_norm(tree) -> jnp.ndarray:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def _clip_by_global_norm(grads, max_norm: float):
+    """Returns (grads UNCHANGED, scale): callers fold the scale into the
+    per-leaf update so no full fp32 gradient tree is ever materialized
+    (matters at 1T params: a fp32 grad tree is 4TB)."""
+    norm = _global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return grads, scale
+
+
+def sgd(lr: float = 1e-2, clip: float = 1.0) -> Optimizer:
+    def init(params):
+        return {}
+
+    def update(grads, state, params, step):
+        grads, scale = _clip_by_global_norm(grads, clip)
+        new_params = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32) * scale
+                          ).astype(p.dtype),
+            params, grads)
+        return new_params, state
+
+    return Optimizer(init=init, update=update, name="sgd")
+
+
+def adamw(lr_fn: Callable | float = 3e-4, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.1,
+          clip: float = 1.0) -> Optimizer:
+    if not callable(lr_fn):
+        base = lr_fn
+        lr_fn = lambda step: jnp.asarray(base, jnp.float32)  # noqa: E731
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)  # noqa: E731
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, scale = _clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        lr = lr_fn(step)
+        m = jax.tree.map(
+            lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32) * scale,
+            state["m"], grads)
+        v = jax.tree.map(
+            lambda vv, g: b2 * vv
+            + (1 - b2) * jnp.square(g.astype(jnp.float32) * scale),
+            state["v"], grads)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(p, mm, vv):
+            u = (mm / bc1) / (jnp.sqrt(vv / bc2) + eps)
+            u = u + weight_decay * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype)
+
+        new_params = jax.tree.map(upd, params, m, v)
+        return new_params, {"m": m, "v": v}
+
+    return Optimizer(init=init, update=update, name="adamw")
+
+
+def adafactor(lr_fn: Callable | float = 1e-2, decay: float = 0.8,
+              eps: float = 1e-30, clip: float = 1.0,
+              min_dim_factored: int = 128) -> Optimizer:
+    """Factored second-moment optimizer (Shazeer & Stern 2018, simplified)."""
+    if not callable(lr_fn):
+        base = lr_fn
+        lr_fn = lambda step: jnp.asarray(base, jnp.float32)  # noqa: E731
+
+    def factored(p) -> bool:
+        return (p.ndim >= 2 and p.shape[-1] >= min_dim_factored
+                and p.shape[-2] >= min_dim_factored)
+
+    def init(params):
+        def leaf(p):
+            if factored(p):
+                return {"vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:],
+                                        jnp.float32)}
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return jax.tree.map(leaf, params,
+                            is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        grads, scale = _clip_by_global_norm(grads, clip)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr = lr_fn(step)
+
+        def upd(p, g, s):
+            g = g.astype(jnp.float32) * scale
+            g2 = g * g + eps
+            if factored(p):
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (vr[..., :, None] * vc[..., None, :]
+                         / jnp.maximum(vr.mean(axis=-1)[..., None, None],
+                                       eps))
+                u = g / jnp.sqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g / jnp.sqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS <= 1)
+            rms = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms)
+            return (p.astype(jnp.float32) - lr * u).astype(p.dtype), ns
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_s = tdef.flatten_up_to(state)
+        out = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = tdef.unflatten([o[0] for o in out])
+        new_state = tdef.unflatten([o[1] for o in out])
+        return new_params, new_state
+
+    return Optimizer(init=init, update=update, name="adafactor")
+
+
+def opt_shardings(opt: Optimizer, param_shardings: Any, params_spec: Any,
+                  mesh) -> Any:
+    """Shardings for opt state: mirror the param leaf's sharding; factored
+    Adafactor leaves drop the reduced axis from the PartitionSpec."""
+    state_spec = jax.eval_shape(opt.init, params_spec)
+    if opt.name == "adamw":
+        return {"m": param_shardings, "v": param_shardings}
+    if opt.name == "sgd":
+        return state_spec  # stateless
+
+    flat_ps, tdef = jax.tree.flatten(param_shardings)
+    flat_pv = jax.tree.leaves(params_spec)
+    flat_ss = tdef.flatten_up_to(state_spec)
+
+    def leaf_sharding(psh: NamedSharding, pval, subtree):
+        def match(path_unused, s):
+            if s.shape == pval.shape:
+                return psh
+            spec = list(psh.spec) + [None] * (pval.ndim - len(psh.spec))
+            if s.ndim == pval.ndim - 1 and s.shape == pval.shape[:-1]:
+                return NamedSharding(mesh, P(*spec[:-1]))      # vr
+            if s.ndim == pval.ndim - 1 \
+                    and s.shape == pval.shape[:-2] + pval.shape[-1:]:
+                return NamedSharding(mesh, P(*(spec[:-2] + spec[-1:])))  # vc
+            return NamedSharding(mesh, P())
+        return jax.tree_util.tree_map_with_path(match, subtree)
+
+    out = [leaf_sharding(psh, pv, ss)
+           for psh, pv, ss in zip(flat_ps, flat_pv, flat_ss)]
+    return jax.tree.unflatten(tdef, out)

@@ -1,0 +1,5 @@
+from .ft import (FaultInjector, FaultTolerantLoop, HeartbeatMonitor,
+                 StragglerDetector)
+
+__all__ = ["FaultTolerantLoop", "HeartbeatMonitor", "StragglerDetector",
+           "FaultInjector"]

@@ -1,0 +1,3 @@
+from .engine import Request, Result, ServeEngine
+
+__all__ = ["ServeEngine", "Request", "Result"]

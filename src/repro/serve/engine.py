@@ -1,0 +1,131 @@
+"""Batched serving engine: wave-scheduled prefill + decode.
+
+Requests queue up; the engine forms waves of up to `max_batch` requests,
+left-pads prompts to a common length, prefills once, then decodes all slots
+in lockstep with per-slot early-stop masks (finished slots keep decoding
+into a sink but their outputs are frozen) — static-shape-friendly continuous
+batching for TPU.  Greedy or temperature sampling.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import ModelConfig, decode_step, init_cache, prefill
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray          # (len,) int32
+    max_new_tokens: int = 32
+    eos_id: Optional[int] = None
+    temperature: float = 0.0
+
+
+@dataclasses.dataclass
+class Result:
+    uid: int
+    tokens: np.ndarray          # generated tokens (without prompt)
+    prompt_len: int
+    steps: int
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params, max_batch: int = 8,
+                 max_len: int = 512, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.queue: List[Request] = []
+        self.key = jax.random.PRNGKey(seed)
+        self._prefill = jax.jit(
+            lambda p, b, c: prefill(cfg, p, b, c))
+        self._decode = jax.jit(
+            lambda p, t, c: decode_step(cfg, p, t, c))
+
+    def submit(self, req: Request):
+        self.queue.append(req)
+
+    def _wave(self) -> List[Request]:
+        wave = self.queue[:self.max_batch]
+        self.queue = self.queue[self.max_batch:]
+        return wave
+
+    def run_wave(self) -> List[Result]:
+        wave = self._wave()
+        if not wave:
+            return []
+        B = len(wave)
+        plen = max(len(r.prompt) for r in wave)
+        max_new = max(r.max_new_tokens for r in wave)
+        total = plen + max_new
+        assert total <= self.max_len, "wave exceeds engine max_len"
+
+        # left-pad prompts to common length (pad with token 0)
+        toks = np.zeros((B, plen), np.int32)
+        for i, r in enumerate(wave):
+            toks[i, plen - len(r.prompt):] = r.prompt
+
+        batch = {"tokens": jnp.asarray(toks)}
+        if self.cfg.frontend == "vision_stub":
+            batch["vision_embeds"] = jnp.zeros(
+                (B, self.cfg.n_vision_tokens, self.cfg.d_model),
+                self.cfg.jdtype)
+        if self.cfg.block == "encdec":
+            batch["audio_frames"] = jnp.zeros(
+                (B, self.cfg.n_audio_frames, self.cfg.d_model),
+                self.cfg.jdtype)
+
+        cache = init_cache(self.cfg, B, total)
+        logits, cache = self._prefill(self.params, batch, cache)
+
+        out = np.zeros((B, max_new), np.int32)
+        done = np.zeros(B, bool)
+        steps = 0
+        for t in range(max_new):
+            nxt = self._sample(logits, wave)
+            nxt_np = np.asarray(nxt)
+            for i, r in enumerate(wave):
+                if not done[i]:
+                    out[i, t] = nxt_np[i]
+                    if r.eos_id is not None and nxt_np[i] == r.eos_id:
+                        done[i] = True
+                    if t + 1 >= r.max_new_tokens:
+                        done[i] = True
+            steps += 1
+            if done.all():
+                break
+            logits, cache = self._decode(self.params, nxt[:, None], cache)
+
+        results = []
+        for i, r in enumerate(wave):
+            n = min(r.max_new_tokens, max_new)
+            toks_i = out[i, :n]
+            if r.eos_id is not None and (toks_i == r.eos_id).any():
+                toks_i = toks_i[:int(np.argmax(toks_i == r.eos_id)) + 1]
+            results.append(Result(uid=r.uid, tokens=toks_i,
+                                  prompt_len=len(r.prompt), steps=steps))
+        return results
+
+    def _sample(self, logits: jnp.ndarray, wave: List[Request]):
+        temps = np.asarray([r.temperature for r in wave], np.float32)
+        if (temps == 0).all():
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        self.key, sub = jax.random.split(self.key)
+        scaled = logits / jnp.maximum(jnp.asarray(temps)[:, None], 1e-4)
+        sampled = jax.random.categorical(sub, scaled, axis=-1)
+        greedy = jnp.argmax(logits, axis=-1)
+        return jnp.where(jnp.asarray(temps) == 0, greedy,
+                         sampled).astype(jnp.int32)
+
+    def run_all(self) -> List[Result]:
+        results = []
+        while self.queue:
+            results.extend(self.run_wave())
+        return results

@@ -1,0 +1,8 @@
+import os
+import sys
+
+# keep tests single-device (the dry-run sets 512 fake devices in its OWN
+# process; setting it here would poison every test)
+os.environ.setdefault("REPRO_BENCH_MODE", "fast")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,103 @@
+"""Per-kernel correctness: shape/dtype sweeps vs the pure-jnp oracles
+(interpret=True executes kernel bodies on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.tiled_matmul import vmem_bytes
+
+RNG = np.random.default_rng(0)
+
+
+def rand(shape, dtype):
+    x = RNG.normal(size=shape).astype(np.float32)
+    return jnp.asarray(x, dtype)
+
+
+@pytest.mark.parametrize("order", ["out", "a", "b"])
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (128, 128, 128, 64, 64, 64),
+    (256, 192, 64, 64, 64, 32),
+    (64, 64, 256, 32, 32, 128),
+    (128, 256, 128, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_tiled_matmul_sweep(order, m, n, k, bm, bn, bk, dtype):
+    x, y = rand((m, k), dtype), rand((k, n), dtype)
+    got = ops.matmul(x, y, bm=bm, bn=bn, bk=bk, order=order)
+    gold = ref.matmul_ref(x, y)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(gold, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("h,sq,skv,d,bq,bkv", [
+    (2, 128, 128, 64, 64, 64),
+    (4, 64, 256, 32, 32, 64),
+    (1, 256, 256, 128, 128, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(causal, h, sq, skv, d, bq, bkv, dtype):
+    if causal and sq != skv:
+        pytest.skip("causal requires square for this sweep")
+    q, k, v = (rand((h, sq, d), dtype), rand((h, skv, d), dtype),
+               rand((h, skv, d), dtype))
+    got = ops.attention(q, k, v, causal=causal, bq=bq, bkv=bkv)
+    gold = ref.attention_ref(q, k, v, causal=causal)
+    tol = 2e-5 if dtype == jnp.float32 else 3e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(gold, np.float32),
+                               rtol=tol, atol=tol * 8)
+
+
+def test_flash_attention_gqa_bshd():
+    q = rand((2, 128, 8, 32), jnp.float32)
+    k = rand((2, 128, 2, 32), jnp.float32)
+    v = rand((2, 128, 2, 32), jnp.float32)
+    got = ops.attention_bshd(q, k, v, causal=True, bq=64, bkv=64)
+    gold = ops.attention_bshd(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(gold),
+                               rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("B,L,D,N,chunk,dblk", [
+    (1, 32, 16, 8, 8, 8),
+    (2, 64, 32, 16, 16, 16),
+    (2, 128, 64, 8, 32, 32),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32])
+def test_mamba_scan_sweep(B, L, D, N, chunk, dblk, dtype):
+    x = rand((B, L, D), dtype) * 0.5
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (B, L, D)), dtype)
+    b = rand((B, L, N), dtype)
+    c = rand((B, L, N), dtype)
+    a_log = -jnp.asarray(RNG.uniform(0.5, 2.0, (D, N)), jnp.float32)
+    d_skip = jnp.ones((D,), jnp.float32)
+    got = ops.mamba_scan(x, dt, b, c, a_log, d_skip, chunk=chunk,
+                         d_block=dblk)
+    gold = ref.mamba_scan_ref(x, dt, b, c, a_log, d_skip)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(gold),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_vmem_budget_helper():
+    # the T-axis legality check: a 128^3 bf16 block set fits 16MB VMEM
+    assert vmem_bytes(128, 128, 128, 2) < 16 * 2 ** 20
+    assert vmem_bytes(2048, 2048, 2048, 2) > 16 * 2 ** 20
+
+
+def test_kernel_matches_model_flash_path():
+    """The Pallas flash kernel and the model's flash_jnp twin agree."""
+    from repro.models.attention import _flash_attention_jnp
+    q = rand((1, 128, 4, 32), jnp.float32)
+    k = rand((1, 128, 2, 32), jnp.float32)
+    v = rand((1, 128, 2, 32), jnp.float32)
+    jnp_out = _flash_attention_jnp(q, k, v, True, jnp.arange(128),
+                                   block_kv=64)
+    pallas_out = ops.attention_bshd(q, k, v, causal=True, bq=64, bkv=64)
+    np.testing.assert_allclose(np.asarray(jnp_out), np.asarray(pallas_out),
+                               rtol=2e-5, atol=2e-4)

@@ -1,0 +1,88 @@
+"""GA mapper + DSE behaviour (paper Sec 5-7)."""
+import numpy as np
+import pytest
+
+from repro.core import (FULLFLEX, GAConfig, INFLEX, PARTFLEX, area_of,
+                        design_fixed_accelerator, evaluate_mapping,
+                        get_model, inflex_baseline, make_variant, open_axes,
+                        search, search_model)
+from repro.core.mapper import evaluate_fixed_genome
+from repro.core.workloads import Layer
+
+CFG = GAConfig(population=32, generations=12, seed=0)
+LAYER1 = Layer("stem", (32, 3, 224, 224, 3, 3))
+LAYER_DW = Layer("dw", (1, 480, 14, 14, 5, 5), depthwise=True)
+
+
+def test_more_flexibility_never_worse():
+    """A_X grows with flexibility level => best mapping can only improve.
+    (GA noise tolerated at 0.1%; InFlex point is seeded into every pop.)"""
+    r_in = search(LAYER1, inflex_baseline(), CFG)
+    r_part = search(LAYER1, make_variant("1000", PARTFLEX), CFG)
+    r_full = search(LAYER1, make_variant("1000", FULLFLEX), CFG)
+    r_all = search(LAYER1, make_variant("1111", FULLFLEX), CFG)
+    assert r_part.runtime <= r_in.runtime * 1.001
+    assert r_all.runtime <= r_full.runtime * 1.15  # larger space, same budget
+    assert r_all.runtime < r_in.runtime
+
+
+def test_mapper_respects_inflex_constraints():
+    r = search(LAYER1, inflex_baseline(), CFG)
+    assert r.mapping.tiles == (32, 3, 3, 3, 3, 3)  # fixed tile clipped
+    assert r.mapping.parallel == (0, 1)
+    assert r.mapping.shape == (16, 64)
+
+
+def test_mapper_respects_partflex_order_subset():
+    from repro.core.spec import perm_to_order_str
+    spec = make_variant("0100", PARTFLEX)
+    r = search(LAYER1, spec, CFG)
+    assert perm_to_order_str(r.mapping.order) in spec.order.allowed_orders
+
+
+def test_mapper_finds_non_kc_parallelism_for_depthwise():
+    """Paper Sec 6.4: depthwise layers want YX/RS-style parallelism."""
+    spec = make_variant("0010", FULLFLEX)
+    r = search(LAYER_DW, spec, GAConfig(population=48, generations=20))
+    assert 0 not in r.mapping.parallel[:1] or r.mapping.parallel != (0, 1)
+    r_fixed = search(LAYER_DW, inflex_baseline(), CFG)
+    assert r.runtime < r_fixed.runtime
+
+
+def test_search_model_dedup_consistent():
+    layers = get_model("alexnet")
+    spec = make_variant("1000", FULLFLEX)
+    a = search_model(layers, spec, CFG, dedup=True)
+    b = search_model(layers, spec, CFG, dedup=False)
+    assert a.runtime == pytest.approx(b.runtime, rel=0.25)
+    assert a.feasible and b.feasible
+
+
+def test_fixed_config_design_and_replay():
+    spec, genome, res = design_fixed_accelerator(
+        "ncf", cfg=GAConfig(population=24, generations=10))
+    assert res.feasible
+    replay = evaluate_fixed_genome(get_model("ncf"), spec, genome)
+    assert replay.runtime == pytest.approx(res.runtime, rel=1e-6)
+    # frozen spec is class-0000
+    assert spec.class_str() == "0000"
+
+
+def test_open_axes_names_and_classes():
+    spec, genome, _ = design_fixed_accelerator(
+        "ncf", cfg=GAConfig(population=16, generations=6))
+    for cs in ("1000", "0011", "1111"):
+        opened = open_axes(spec, cs)
+        assert opened.class_str() == cs
+    # opening axes can only improve runtime
+    base = evaluate_fixed_genome(get_model("ncf"), spec, genome)
+    flex = search_model(get_model("ncf"), open_axes(spec, "1111"), CFG)
+    assert flex.runtime <= base.runtime * 1.001
+
+
+def test_area_monotone_in_flexibility():
+    a0 = area_of(inflex_baseline()).total_area
+    a1 = area_of(make_variant("1000")).total_area
+    a15 = area_of(make_variant("1111")).total_area
+    assert a0 < a1 < a15
+    assert (a15 - a0) / a0 < 0.02  # paper: low overhead
