@@ -1,0 +1,4 @@
+"""Reproduction of 'A Formalism of DNN Accelerator Flexibility' grown into a
+sharded JAX/Pallas training + serving stack (see ROADMAP.md)."""
+
+__version__ = "0.1.0"

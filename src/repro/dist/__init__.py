@@ -1,0 +1,9 @@
+"""Logical-axis sharding: rule tables bind model annotations to mesh axes."""
+from .api import (axis_rules, constrain, current_rules, logical_to_spec,
+                  validate_spec)
+from .sharding import (DEFAULT_RULES, batch_spec, cache_shardings, make_rules,
+                       param_shardings)
+
+__all__ = ["axis_rules", "constrain", "current_rules", "logical_to_spec",
+           "validate_spec", "DEFAULT_RULES", "batch_spec", "cache_shardings",
+           "make_rules", "param_shardings"]

@@ -1,0 +1,127 @@
+"""Logical-axis sharding API.
+
+Model code never names mesh axes.  It annotates tensors with *logical* axis
+names — ``("batch", "seq", None)`` — and a rule table (bound per launch by
+``axis_rules``) maps each logical name to zero or more *mesh* axes.  This is
+the software face of the paper's P axis: which tensor dimension is spatially
+partitioned is a mapping decision, so it lives in one swappable table instead
+of being scattered through the model as hard-coded ``PartitionSpec``s.
+
+Outside an ``axis_rules`` context every annotation is a no-op, so the same
+model code runs unsharded on CPU unit tests and sharded on a production mesh.
+
+    with axis_rules(mesh, make_rules(mesh, fsdp=True)):
+        loss = train_step(state, batch)      # constrain() calls now bind
+
+``validate_spec`` is the safety valve: per dimension it keeps the longest
+prefix of mesh axes that exist on the mesh, are unused by earlier dimensions,
+and divide the dimension — one bad leading axis drops the rest of that
+entry's tuple, so bind rules through ``make_rules`` (which pre-filters absent
+axes) rather than using ``DEFAULT_RULES`` raw on a smaller mesh.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# A rule maps a logical axis name to: None (replicate), one mesh axis name,
+# or a tuple of mesh axis names (sharded over their product, major first).
+RuleValue = Union[None, str, Tuple[str, ...]]
+Rules = Dict[str, RuleValue]
+
+_state = threading.local()
+
+
+def _stack():
+    if not hasattr(_state, "stack"):
+        _state.stack = []
+    return _state.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Mesh, rules: Rules):
+    """Bind (mesh, rules) for the dynamic extent of the block.
+
+    Nesting is allowed; the innermost binding wins.  Entered at trace time
+    inside jit-wrapped step functions, so the constraints are baked into the
+    jaxpr and the context never needs to be live at execution time.
+    """
+    _stack().append((mesh, dict(rules)))
+    try:
+        yield
+    finally:
+        _stack().pop()
+
+
+def current_rules() -> Optional[Tuple[Mesh, Rules]]:
+    """The innermost active (mesh, rules) binding, or None."""
+    stack = _stack()
+    return stack[-1] if stack else None
+
+
+def logical_to_spec(logical_axes: Sequence[Optional[str]], rules: Rules
+                    ) -> P:
+    """Resolve logical axis names through a rule table to a PartitionSpec.
+
+    ``None`` entries and logical names without a rule resolve to None
+    (replicated), so annotations stay valid when a rule table deliberately
+    omits an axis (e.g. no 'model' axis on a data-only mesh).
+    """
+    return P(*(rules.get(name) if name is not None else None
+               for name in logical_axes))
+
+
+def validate_spec(spec: P, shape: Sequence[int], mesh: Mesh) -> P:
+    """Repair a PartitionSpec against a concrete mesh and array shape.
+
+    Per dimension, mesh axes are kept as the longest prefix such that every
+    kept axis (a) exists on the mesh, (b) is not already sharding an earlier
+    dimension, and (c) the cumulative axis-size product divides the dimension.
+    Size-1 mesh axes always divide, so no-op shardings survive.  Tuple entries
+    stay tuples (their kept prefix), string entries stay strings or drop to
+    None — never a hard error, because the same annotated model must lower on
+    every mesh from a CPU singleton to a multi-pod slice.
+    """
+    sizes = dict(mesh.shape)
+    used: set = set()
+    entries = []
+    for dim, entry in zip(tuple(shape), tuple(spec)):
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        kept = []
+        prod = 1
+        for ax in axes:
+            if ax not in sizes or ax in used or dim % (prod * sizes[ax]):
+                break
+            kept.append(ax)
+            prod *= sizes[ax]
+            used.add(ax)
+        if not kept:
+            entries.append(None)
+        elif isinstance(entry, tuple):
+            entries.append(tuple(kept))
+        else:
+            entries.append(kept[0])
+    return P(*entries)
+
+
+def constrain(x: jax.Array, logical_axes: Sequence[Optional[str]]
+              ) -> jax.Array:
+    """Annotate ``x`` with logical axes; a no-op outside ``axis_rules``.
+
+    Inside a binding, resolves the names through the active rules, repairs
+    the spec for the active mesh, and applies ``with_sharding_constraint``.
+    """
+    ctx = current_rules()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = logical_to_spec(tuple(logical_axes), rules)
+    spec = validate_spec(spec, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,220 @@
+"""Rule tables and sharding factories for the production meshes.
+
+``DEFAULT_RULES`` is written for the full multi-pod mesh
+('pod', 'data', 'model'); ``make_rules`` specializes it to whatever mesh is
+actually in hand by dropping absent axes, then layers on the launch-time
+knobs (FSDP, Megatron-SP activations, long-context cache sharding).  The
+knob-to-rule mapping is the TOPS-bridge vocabulary: each knob is one point on
+the paper's flexibility axes, expressed as a one-line rule edit instead of a
+model change.
+
+Factories:
+  batch_spec       -> callable mapping an input ShapeDtypeStruct/array to a
+                      NamedSharding (dim 0 over the batch axes)
+  param_shardings  -> NamedSharding pytree mirroring a param tree leaf-for-leaf
+  cache_shardings  -> NamedSharding pytree for decode caches (KV / SSM state)
+
+All emitted specs pass through ``validate_spec``, so divisibility and axis
+reuse are enforced centrally and every factory is safe on any mesh.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax import tree_util as jtu
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .api import Rules, logical_to_spec, validate_spec
+
+# Mesh axes that carry the batch (data-parallel) dimension, major first.
+DATA_AXES: Tuple[str, ...] = ("pod", "data")
+MODEL_AXIS = "model"
+
+# Logical axis -> mesh axes on the full ('pod', 'data', 'model') mesh.
+#   batch    tokens/requests            -> all data-parallel axes
+#   seq      sequence positions         -> replicated (Megatron-SP opt-in
+#   act_seq  post-block residual seq       via 'act_seq' -> 'model')
+#   kv_seq   cache positions            -> replicated (long-context opt-in)
+#   embed    d_model features           -> replicated (FSDP opt-in -> data)
+#   heads / ff / vocab / expert / inner -> tensor/expert parallel over 'model'
+DEFAULT_RULES: Rules = {
+    "batch": DATA_AXES,
+    "seq": None,
+    "act_seq": None,
+    "kv_seq": None,
+    "embed": None,
+    "heads": MODEL_AXIS,
+    "ff": MODEL_AXIS,
+    "vocab": MODEL_AXIS,
+    "expert": MODEL_AXIS,
+    "inner": MODEL_AXIS,
+}
+
+
+def _on_mesh(value, axis_names) -> Any:
+    """Restrict a rule value to axes present on the mesh (None if none are)."""
+    if value is None:
+        return None
+    if isinstance(value, tuple):
+        kept = tuple(ax for ax in value if ax in axis_names)
+        return kept or None
+    return value if value in axis_names else None
+
+
+def make_rules(mesh: Mesh, *, fsdp: bool = False,
+               seq_activations: bool = False,
+               long_context: bool = False) -> Rules:
+    """Specialize DEFAULT_RULES to `mesh` plus the launch-time knobs.
+
+    fsdp            ZeRO-3: params shard their d_model ('embed') dim over the
+                    data axes; activations are untouched because no activation
+                    annotation uses 'embed'.
+    seq_activations Megatron-SP: the post-block residual stream ('act_seq')
+                    shards over 'model' between attention/MLP regions.
+    long_context    decode caches shard their sequence dim ('kv_seq') over
+                    'model' — a 500k-token KV/state cache never fits one chip.
+    """
+    names = set(mesh.axis_names)
+    rules: Rules = {k: _on_mesh(v, names) for k, v in DEFAULT_RULES.items()}
+    if fsdp:
+        rules["embed"] = _on_mesh(DATA_AXES, names)
+    if seq_activations:
+        rules["act_seq"] = _on_mesh(MODEL_AXIS, names)
+    if long_context:
+        rules["kv_seq"] = _on_mesh(MODEL_AXIS, names)
+    return rules
+
+
+def batch_spec(mesh: Mesh, rules: Optional[Rules] = None):
+    """Returns shard(spec_like) -> NamedSharding: dim 0 over the batch axes.
+
+    Built for ``jax.tree.map`` over input ShapeDtypeStruct trees; dimensions
+    the batch axes cannot divide fall back to replication via validate_spec
+    (decode tokens at global batch 1, say).
+    """
+    rules = rules if rules is not None else make_rules(mesh)
+    batch_axes = rules.get("batch")
+
+    def shard(spec_like) -> NamedSharding:
+        shape = spec_like.shape
+        entries = [None] * len(shape)
+        if shape:
+            entries[0] = batch_axes
+        return NamedSharding(mesh, validate_spec(P(*entries), shape, mesh))
+
+    return shard
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    out = []
+    for k in path:
+        if isinstance(k, jtu.DictKey):
+            out.append(str(k.key))
+        elif isinstance(k, jtu.GetAttrKey):
+            out.append(str(k.name))
+        elif isinstance(k, jtu.SequenceKey):
+            out.append(str(k.idx))
+    return tuple(out)
+
+
+# Trailing-dim logical axes per parameter leaf name (leading stacked-layer /
+# group dims pad with None).  MoE expert tensors carry a leading 'expert' dim.
+_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "embed": ("vocab", "embed"),
+    "unembed": ("embed", "vocab"),
+    "router": (None, None),
+    "wq": ("embed", "heads"),
+    "wk": ("embed", "heads"),
+    "wv": ("embed", "heads"),
+    "wo": ("heads", "embed"),
+    "w_gate": ("embed", "ff"),
+    "w_up": ("embed", "ff"),
+    "w_down": ("ff", "embed"),
+    "in_proj": ("embed", "inner"),
+    "out_proj": ("inner", "embed"),
+    "x_proj": ("inner", None),
+    "dt_proj": (None, "inner"),
+    "bc_proj": ("embed", None),
+    "conv_w": (None, "inner"),
+    "conv_b": ("inner",),
+    "dt_bias": ("inner",),
+    "A_log": ("inner", None),
+    "D": ("inner",),
+}
+_MOE_PARAM_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "w_gate": ("expert", "embed", "ff"),
+    "w_up": ("expert", "embed", "ff"),
+    "w_down": ("expert", "ff", "embed"),
+}
+
+
+def _right_aligned_spec(axes: Optional[Tuple[Optional[str], ...]],
+                        shape, mesh: Mesh, rules: Rules) -> P:
+    """Logical axes bound to the *trailing* dims; leading dims replicate.
+    Unknown names or rank mismatches replicate the whole leaf."""
+    ndim = len(shape)
+    if axes is None or ndim < len(axes):
+        return P()
+    entries = tuple(logical_to_spec(axes, rules))
+    spec = P(*((None,) * (ndim - len(axes)) + entries))
+    return validate_spec(spec, shape, mesh)
+
+
+def param_shardings(cfg, params_spec: Any, mesh: Mesh,
+                    rules: Optional[Rules] = None) -> Any:
+    """NamedSharding pytree mirroring `params_spec` leaf-for-leaf.
+
+    Leaves are matched by their pytree key name against the logical-axis
+    tables above; anything unrecognized (norm scales, biases) replicates —
+    a performance decision only, never a correctness one, since jit's SPMD
+    partitioner is semantics-preserving for any placement.
+    """
+    del cfg  # matched by leaf name; cfg kept for API symmetry/extensions
+    rules = rules if rules is not None else make_rules(mesh)
+
+    def leaf(path, spec_like) -> NamedSharding:
+        names = _path_names(path)
+        leaf_name = names[-1] if names else ""
+        axes = _PARAM_AXES.get(leaf_name)
+        if "moe" in names and leaf_name in _MOE_PARAM_AXES:
+            axes = _MOE_PARAM_AXES[leaf_name]
+        return NamedSharding(
+            mesh, _right_aligned_spec(axes, spec_like.shape, mesh, rules))
+
+    return jtu.tree_map_with_path(leaf, params_spec)
+
+
+# Trailing-dim logical axes per cache leaf name.  KV caches are
+# (B, S_max, n_kv, hd) under any number of stacked layer/group dims.
+_CACHE_AXES: Dict[str, Tuple[Optional[str], ...]] = {
+    "k": ("batch", "kv_seq", "heads", None),
+    "v": ("batch", "kv_seq", "heads", None),
+    "cross_k": ("batch", "kv_seq", "heads", None),
+    "cross_v": ("batch", "kv_seq", "heads", None),
+    "conv": ("batch", None, "inner"),
+    "pos": (),
+    "ready": (),
+}
+
+
+def cache_shardings(cfg, cache_spec: Any, mesh: Mesh,
+                    rules: Optional[Rules] = None) -> Any:
+    """NamedSharding pytree for a decode cache (KV, SSM state, or hybrid).
+
+    The recurrent 'state' leaf is rank-dispatched per block family:
+    Mamba-1 carries (B, d_inner, N), Mamba-2 (B, heads, headdim, N).
+    """
+    rules = rules if rules is not None else make_rules(mesh)
+    state_axes = (("batch", "inner", None) if cfg.block == "mamba1"
+                  else ("batch", "inner", None, None))
+
+    def leaf(path, spec_like) -> NamedSharding:
+        names = _path_names(path)
+        leaf_name = names[-1] if names else ""
+        axes = (_CACHE_AXES.get(leaf_name) if leaf_name != "state"
+                else state_axes)
+        return NamedSharding(
+            mesh, _right_aligned_spec(axes, spec_like.shape, mesh, rules))
+
+    return jtu.tree_map_with_path(leaf, cache_spec)

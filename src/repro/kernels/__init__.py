@@ -1,3 +1,16 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+"""Pallas TPU kernels for the compute hot-spots (matmul / flash attention /
+selective scan) plus version-compat helpers shared by the kernel modules."""
+
+
+def tpu_compiler_params(**kwargs):
+    """Construct TPU compiler params across jax versions.
+
+    jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams``; try
+    the new name first and fall back to the old one.  Imported lazily so the
+    pure-jnp oracles (``ref``) stay importable on builds without pallas-TPU.
+    """
+    from jax.experimental.pallas import tpu as pltpu
+    cls = getattr(pltpu, "CompilerParams", None)
+    if cls is None:
+        cls = pltpu.TPUCompilerParams
+    return cls(**kwargs)

@@ -1,10 +1,8 @@
 """Cost-model unit + property tests (hypothesis): physical invariants."""
-import hypothesis
-import hypothesis.strategies as st
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.core import HWConfig, lower_bound_cycles
 from repro.core.cost_model import evaluate_mapping

@@ -1,9 +1,8 @@
 """Property tests (hypothesis) for the SSM substrate invariants."""
-import hypothesis.strategies as st
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings
+from _hypothesis_compat import given, settings, st
 
 from repro.models.ssm import causal_conv1d, chunked_linear_scan
 
