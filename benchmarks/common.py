@@ -17,11 +17,21 @@ BUDGETS = {
 }
 
 
+def bench_mode() -> str:
+    return _MODE
+
+
 def ga_budget(scale: float = 1.0) -> GAConfig:
+    """The GA budget for the current REPRO_BENCH_MODE; REPRO_ENGINE
+    (batched | serial) overrides the MSE engine, which is how
+    ``benchmarks.run --engines`` A/B-times the two engines."""
+    import dataclasses
     base = BUDGETS[_MODE]
+    engine = os.environ.get("REPRO_ENGINE")
+    if engine:
+        base = dataclasses.replace(base, engine=engine)
     if scale == 1.0:
         return base
-    import dataclasses
     return dataclasses.replace(
         base, generations=max(4, int(base.generations * scale)))
 

@@ -3,13 +3,17 @@ FullFlex-1111), with H-F / W-F flexion quantification.
 
 Paper reference points: PartFlex-1000 H-F ~0.22 (1:1:1 hard partition);
 FullFlex-1000 ~4.8x over InFlex end-to-end; PartFlex strictly between.
+
+With the batched engine, each per-layer column and the end-to-end model
+sweep run as chunked (layer, spec) rows through one compiled GA program.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.core import (FULLFLEX, PARTFLEX, compute_flexion, get_model,
-                        inflex_baseline, make_variant, search, search_model)
+                        inflex_baseline, make_variant, search, search_model,
+                        search_specs_batched)
 
 from .common import MNASNET_LAYERS, Table, find_layer, ga_budget
 
@@ -23,30 +27,52 @@ def run(print_fn=print):
         ("FullFlex1000", make_variant("1000", FULLFLEX)),
         ("FullFlex1111", make_variant("1111", FULLFLEX)),
     ]
+    specs = [spec for _, spec in accels]
+    quoted = [("layer1", MNASNET_LAYERS["layer1"]),
+              ("layer16", MNASNET_LAYERS["layer16"]),
+              ("layer29", MNASNET_LAYERS["layer29"])]
 
     t = Table("Fig 7 — Tile axis isolation (MnasNet)",
               ["accel", "layer", "runtime_rel", "energy_rel", "edp_rel",
                "H-F(T)", "W-F(T)", "chosen_tile"])
-    base_by_layer = {}
     derived = {}
-    for lname, dims in [("layer1", MNASNET_LAYERS["layer1"]),
-                        ("layer16", MNASNET_LAYERS["layer16"]),
-                        ("layer29", MNASNET_LAYERS["layer29"])]:
-        layer = find_layer("mnasnet", dims)
+
+    # per-layer columns: one batched MSE over all (layer, accel) rows
+    quoted_layers = [find_layer("mnasnet", dims) for _, dims in quoted]
+    if cfg.engine == "batched":
+        per_spec = search_specs_batched(quoted_layers, specs, cfg)
+        results = {(a, ln): per_spec[ai].per_layer[li]
+                   for ai, (a, _) in enumerate(accels)
+                   for li, (ln, _) in enumerate(quoted)}
+    else:
+        # same per-layer seed convention as the batched branch
+        # (cfg.seed + 1000 * layer index), so both engines print
+        # identical per-layer columns
+        results = {(a, ln): search(
+            layer, spec, dataclasses.replace(cfg, seed=cfg.seed + 1000 * li))
+            for a, spec in accels
+            for li, ((ln, _), layer) in enumerate(zip(quoted, quoted_layers))}
+    for li, (lname, dims) in enumerate(quoted):
+        layer = quoted_layers[li]
+        base = results[("InFlex1000", lname)]
         for aname, spec in accels:
-            r = search(layer, spec, cfg)
-            if aname == "InFlex1000":
-                base_by_layer[lname] = r
-            b = base_by_layer[lname]
+            r = results[(aname, lname)]
             fx = compute_flexion(spec, layer, mc_samples=20_000)
-            t.add(aname, lname, r.runtime / b.runtime, r.energy / b.energy,
-                  r.edp / b.edp, fx.per_axis_hf["T"], fx.per_axis_wf["T"],
+            t.add(aname, lname, r.runtime / base.runtime,
+                  r.energy / base.energy, r.edp / base.edp,
+                  fx.per_axis_hf["T"], fx.per_axis_wf["T"],
                   str(r.mapping.tiles))
 
     # end-to-end model
+    if cfg.engine == "batched":
+        model_res = dict(zip((a for a, _ in accels),
+                             search_specs_batched(layers, specs, cfg)))
+    else:
+        model_res = {a: search_model(layers, spec, cfg)
+                     for a, spec in accels}
     model_rt = {}
-    for aname, spec in accels:
-        res = search_model(layers, spec, cfg)
+    for aname, _ in accels:
+        res = model_res[aname]
         model_rt[aname] = res.runtime
         t.add(aname, "model", res.runtime / model_rt["InFlex1000"],
               res.energy, "-", "-", "-", "-")
@@ -58,6 +84,7 @@ def run(print_fn=print):
                                        / model_rt["PartFlex1000"])
     derived["ordering_ok"] = (model_rt["FullFlex1111"]
                               <= model_rt["FullFlex1000"]
+                              and model_rt["FullFlex1000"]
                               <= model_rt["PartFlex1000"] * 1.001
                               and model_rt["PartFlex1000"]
                               <= model_rt["InFlex1000"] * 1.001)

@@ -6,6 +6,16 @@ of the whole table/figure reproduction; derived = its headline metric).
   PYTHONPATH=src python -m benchmarks.run                 # everything
   PYTHONPATH=src python -m benchmarks.run table3 fig7     # a subset
   REPRO_BENCH_MODE=fast|default|full                      # GA budgets
+  REPRO_ENGINE=batched|serial                             # MSE engine
+
+Machine-readable perf trajectory:
+
+  python -m benchmarks.run fig7 fig13 --engines serial,batched \
+      --json BENCH_mapper.json
+
+runs every selected bench once per engine and writes a BENCH JSON artifact
+(per-bench ``us_per_call`` + derived metrics + engine + speedups) so future
+PRs can diff mapper performance instead of guessing.
 """
 from __future__ import annotations
 
@@ -18,6 +28,7 @@ import traceback
 from . import (bridge_validation, fig7_tile, fig8_buffer, fig9_order,
                fig10_parallelism, fig11_shape, fig12_arraysize,
                fig13_futureproof, roofline, table3_area)
+from .common import bench_mode
 
 BENCHES = {
     "table3": (table3_area, "fullflex_overhead_pct"),
@@ -32,10 +43,41 @@ BENCHES = {
     "bridge": (bridge_validation, "long_decode_speedup"),
 }
 
+BENCH_SCHEMA = "repro-bench-mapper/v1"
 
-def main(argv=None) -> int:
-    argv = argv if argv is not None else sys.argv[1:]
-    names = [a for a in argv if a in BENCHES] or list(BENCHES)
+
+def _warm_engine(engine: str) -> None:
+    """Compile the engine's programs for the current GA budget outside the
+    timed region — us_per_call reports steady-state per-figure cost, not the
+    one-time jit (which the persistent XLA cache amortizes anyway).
+
+    Warms every jit family a bench can hit: the engine program (or the
+    serial evaluate_population, in both hard-partition variants) plus the
+    engine-independent fixed-config objective and fixed-genome evaluator, so
+    neither engine pass times compiles the other pass already paid for."""
+    import dataclasses
+
+    from repro.core import (Layer, PARTFLEX, make_variant, search,
+                            search_fixed_config)
+    from repro.core.engine import warmup_engine
+
+    from .common import ga_budget
+
+    cfg = ga_budget()
+    tiny = Layer("warmup", (4, 4, 4, 4, 1, 1))
+    if engine == "batched":
+        warmup_engine(cfg)
+    else:
+        scfg = dataclasses.replace(cfg, engine="serial", generations=2)
+        search(tiny, make_variant("1111"), scfg)
+        search(tiny, make_variant("1111", PARTFLEX), scfg)
+    # shared jits (fixed-config objective + batched fixed-genome eval)
+    search_fixed_config([tiny], make_variant("1111"),
+                        dataclasses.replace(cfg, generations=2))
+
+
+def _run_once(names):
+    """Run the selected benches once; returns (csv_rows, results, failed)."""
     csv_rows = []
     results = {}
     failed = 0
@@ -52,13 +94,110 @@ def main(argv=None) -> int:
             traceback.print_exc()
             csv_rows.append((name, (time.time() - t0) * 1e6,
                              f"ERROR:{type(e).__name__}"))
+    return csv_rows, results, failed
+
+
+def _bench_json(engine_rows, engine_results):
+    """BENCH artifact: per-engine per-bench us_per_call + derived metrics,
+    plus serial/batched speedups when both engines ran."""
+    doc = {
+        "schema": BENCH_SCHEMA,
+        "bench_mode": bench_mode(),
+        "created_unix": int(time.time()),
+        "warmup": True,   # per-engine jit warmup runs before the timed loop
+        "engines": {},
+    }
+    for engine, rows in engine_rows.items():
+        doc["engines"][engine] = {
+            name: {"us_per_call": round(us, 1),
+                   "derived": engine_results[engine].get(name, {})}
+            for name, us, _ in rows
+        }
+    if {"serial", "batched"} <= set(engine_rows):
+        speedup = {}
+        total_s = total_b = 0.0
+        for (name, us_s, _), (_, us_b, _) in zip(engine_rows["serial"],
+                                                 engine_rows["batched"]):
+            speedup[name] = round(us_s / max(us_b, 1.0), 2)
+            total_s += us_s
+            total_b += us_b
+        speedup["total"] = round(total_s / max(total_b, 1.0), 2)
+        doc["speedup_serial_over_batched"] = speedup
+    return doc
+
+
+def _enable_persistent_jax_cache() -> None:
+    """Persistent XLA compilation cache for bench runs: the batched engine's
+    one-time program compile amortizes across processes (set
+    REPRO_JAX_CACHE_DIR=0 to disable, or point it somewhere else)."""
+    cache_dir = os.environ.get(
+        "REPRO_JAX_CACHE_DIR",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro-flex-xla"))
+    if cache_dir == "0":
+        return
+    try:
+        import jax
+        jax.config.update("jax_compilation_cache_dir", cache_dir)
+        jax.config.update("jax_persistent_cache_min_compile_time_secs", 0.2)
+    except Exception:  # noqa: BLE001 - cache is best-effort
+        pass
+
+
+def main(argv=None) -> int:
+    argv = argv if argv is not None else sys.argv[1:]
+    _enable_persistent_jax_cache()
+    json_path = None
+    engines = None
+    rest = []
+    it = iter(argv)
+    for a in it:
+        if a in ("--json", "--engines"):
+            value = next(it, None)
+            if value is None:
+                print(f"error: {a} expects a value", file=sys.stderr)
+                return 2
+            if a == "--json":
+                json_path = value
+            else:
+                engines = [e.strip() for e in value.split(",") if e.strip()]
+        else:
+            rest.append(a)
+    names = [a for a in rest if a in BENCHES] or list(BENCHES)
+    engines = engines or [os.environ.get("REPRO_ENGINE", "batched")]
+
+    engine_rows = {}
+    engine_results = {}
+    failed = 0
+    prev_engine = os.environ.get("REPRO_ENGINE")
+    for engine in engines:
+        os.environ["REPRO_ENGINE"] = engine
+        try:
+            _warm_engine(engine)
+        except Exception:  # noqa: BLE001 - warmup is best-effort
+            traceback.print_exc()
+        rows, results, nfail = _run_once(names)
+        engine_rows[engine] = rows
+        engine_results[engine] = results
+        failed += nfail
+    if prev_engine is None:
+        os.environ.pop("REPRO_ENGINE", None)
+    else:
+        os.environ["REPRO_ENGINE"] = prev_engine
+
     os.makedirs("results", exist_ok=True)
     with open("results/bench_results.json", "w") as f:
-        json.dump(results, f, indent=2, default=str)
+        json.dump(engine_results[engines[-1]], f, indent=2, default=str)
+    if json_path:
+        with open(json_path, "w") as f:
+            json.dump(_bench_json(engine_rows, engine_results), f, indent=2,
+                      default=str)
+        print(f"\nwrote {json_path}")
 
-    print("\nname,us_per_call,derived")
-    for name, us, derived in csv_rows:
-        print(f"{name},{us:.0f},{derived}")
+    for engine in engines:
+        tag = f"[{engine}] " if len(engines) > 1 else ""
+        print(f"\n{tag}name,us_per_call,derived")
+        for name, us, derived in engine_rows[engine]:
+            print(f"{name},{us:.0f},{derived}")
     return 1 if failed else 0
 
 

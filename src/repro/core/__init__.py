@@ -5,13 +5,16 @@ constrained GA mapper, and the flexibility-aware DSE toolflow.
 from .area_model import AreaReport, area_of
 from .classes import ALL_CLASSES, PRIOR_WORK, classify, describe
 from .cost_model import (CostResult, evaluate_mapping, evaluate_population,
-                         lower_bound_cycles)
+                         evaluate_rows, lower_bound_cycles)
 from .dse import (DSEResult, design_fixed_accelerator, future_proofing_study,
                   geomean_speedup, open_axes, run_dse)
+from .engine import EngineRow, RowResult, run_batched_ga, warmup_engine
 from .flexion import FlexionReport, compute_flexion, model_flexion
-from .mapper import (GAConfig, MapperResult, ModelResult, search,
-                     search_fixed_config, search_model)
-from .mapspace import Mapping, MapSpace, workload_space_size
+from .mapper import (GAConfig, MapperResult, ModelResult,
+                     raw_tile_feasibility, search, search_fixed_config,
+                     search_model, search_model_batched,
+                     search_specs_batched)
+from .mapspace import Mapping, MapSpace, mapspace_for, workload_space_size
 from .spec import (FULLFLEX, INFLEX, PARTFLEX, FlexSpec, HWConfig, OrderSpec,
                    ParallelSpec, ShapeSpec, TileSpec, inflex_baseline,
                    make_variant)
@@ -20,11 +23,14 @@ from .workloads import MODEL_ZOO, Layer, conv, dwconv, gemm, get_model
 __all__ = [
     "AreaReport", "area_of", "ALL_CLASSES", "PRIOR_WORK", "classify",
     "describe", "CostResult", "evaluate_mapping", "evaluate_population",
-    "lower_bound_cycles", "DSEResult", "design_fixed_accelerator",
-    "future_proofing_study", "geomean_speedup", "open_axes", "run_dse",
-    "FlexionReport", "compute_flexion", "model_flexion", "GAConfig",
-    "MapperResult", "ModelResult", "search", "search_fixed_config",
-    "search_model", "Mapping", "MapSpace", "workload_space_size",
+    "evaluate_rows", "lower_bound_cycles", "DSEResult",
+    "design_fixed_accelerator", "future_proofing_study", "geomean_speedup",
+    "open_axes", "run_dse", "EngineRow", "RowResult", "run_batched_ga",
+    "warmup_engine", "FlexionReport", "compute_flexion", "model_flexion",
+    "GAConfig", "MapperResult", "ModelResult", "raw_tile_feasibility",
+    "search", "search_fixed_config", "search_model", "search_model_batched",
+    "search_specs_batched",
+    "Mapping", "MapSpace", "mapspace_for", "workload_space_size",
     "FULLFLEX", "INFLEX", "PARTFLEX", "FlexSpec", "HWConfig", "OrderSpec",
     "ParallelSpec", "ShapeSpec", "TileSpec", "inflex_baseline",
     "make_variant", "MODEL_ZOO", "Layer", "conv", "dwconv", "gemm",

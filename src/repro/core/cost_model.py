@@ -86,13 +86,11 @@ def _stationary_reuse(order: jnp.ndarray, tile: jnp.ndarray,
     return jnp.clip(reuse, 1.0, cap)
 
 
-@partial(jax.jit, static_argnames=("hw", "hard_partition"))
-def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
-                     depthwise: jnp.ndarray,
-                     tiles: jnp.ndarray, order: jnp.ndarray,
-                     par: jnp.ndarray, shape_rc: jnp.ndarray,
-                     hw: HWConfig, hard_partition: bool = False
-                     ) -> CostResult:
+def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
+                          depthwise: jnp.ndarray,
+                          tiles: jnp.ndarray, order: jnp.ndarray,
+                          par: jnp.ndarray, shape_rc: jnp.ndarray,
+                          hw: HWConfig, hard_partition) -> CostResult:
     """Cost one mapping of one layer.  All args are arrays => vmap-friendly.
 
     dims: (6,) int   layer (K, C, Y, X, R, S)
@@ -102,6 +100,9 @@ def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
     order: (6,) int  permutation, outermost first
     par:   (2,) int  dims mapped to (rows, cols)
     shape_rc: (2,) int  (rows, cols)
+    hard_partition: () bool — may be a *traced* array, so one compiled
+        program can evaluate rows of different flexibility specs (the batched
+        engine batches a whole model, optionally several specs, per dispatch).
     """
     dims = dims.astype(jnp.float32)
     t = jnp.clip(tiles.astype(jnp.float32), 1.0, dims)
@@ -121,11 +122,10 @@ def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
     vol_out = jnp.where(depthwise, t[C], t[K]) * t[Y] * t[X]
 
     buf = jnp.float32(hw.buffer_elems)
-    if hard_partition:
-        cap = buf / 3.0
-        fits = (vol_in <= cap) & (vol_w <= cap) & (vol_out <= cap)
-    else:
-        fits = (vol_in + vol_w + vol_out) <= buf
+    cap = buf / 3.0
+    fits_part = (vol_in <= cap) & (vol_w <= cap) & (vol_out <= cap)
+    fits_shared = (vol_in + vol_w + vol_out) <= buf
+    fits = jnp.where(jnp.asarray(hard_partition), fits_part, fits_shared)
 
     # parallel dims must be distinct and the array must exist
     par_ok = (par[0] != par[1]) & (rows >= 1) & (cols >= 1) \
@@ -195,6 +195,18 @@ def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
 
 
 @partial(jax.jit, static_argnames=("hw", "hard_partition"))
+def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
+                     depthwise: jnp.ndarray,
+                     tiles: jnp.ndarray, order: jnp.ndarray,
+                     par: jnp.ndarray, shape_rc: jnp.ndarray,
+                     hw: HWConfig, hard_partition: bool = False
+                     ) -> CostResult:
+    """Jitted single-mapping entry point (static hard_partition)."""
+    return evaluate_mapping_impl(dims, stride, depthwise, tiles, order, par,
+                                 shape_rc, hw, hard_partition)
+
+
+@partial(jax.jit, static_argnames=("hw", "hard_partition"))
 def evaluate_population(dims: jnp.ndarray, stride: jnp.ndarray,
                         depthwise: jnp.ndarray,
                         tiles: jnp.ndarray, order: jnp.ndarray,
@@ -204,10 +216,27 @@ def evaluate_population(dims: jnp.ndarray, stride: jnp.ndarray,
     """vmap of evaluate_mapping over a (P, ...) population of mappings."""
 
     def one(t_, o_, p_, s_):
-        return evaluate_mapping(dims, stride, depthwise, t_, o_, p_, s_,
-                                hw, hard_partition)
+        return evaluate_mapping_impl(dims, stride, depthwise, t_, o_, p_, s_,
+                                     hw, hard_partition)
 
     return jax.vmap(one)(tiles, order, par, shape_rc)
+
+
+@partial(jax.jit, static_argnames=("hw",))
+def evaluate_rows(dims: jnp.ndarray, stride: jnp.ndarray,
+                  depthwise: jnp.ndarray,
+                  tiles: jnp.ndarray, order: jnp.ndarray,
+                  par: jnp.ndarray, shape_rc: jnp.ndarray,
+                  hard_partition: jnp.ndarray, hw: HWConfig) -> CostResult:
+    """Batch-axis plumbing for the MSE engine: one mapping per *row*, where a
+    row is a (layer, spec) pair — every array carries a leading (L,) axis,
+    including the (traced) per-row hard-partition flag."""
+
+    def one(d_, s_, w_, t_, o_, p_, sh_, hp_):
+        return evaluate_mapping_impl(d_, s_, w_, t_, o_, p_, sh_, hw, hp_)
+
+    return jax.vmap(one)(dims, stride, depthwise, tiles, order, par,
+                         shape_rc, hard_partition)
 
 
 def lower_bound_cycles(dims: np.ndarray, depthwise: bool,

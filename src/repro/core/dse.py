@@ -20,7 +20,8 @@ import numpy as np
 from . import area_model
 from .flexion import FlexionReport, model_flexion
 from .mapper import (GAConfig, ModelResult, evaluate_fixed_genome,
-                     search_fixed_config, search_model)
+                     search_fixed_config, search_model,
+                     search_specs_batched)
 from .mapspace import MapSpace
 from .spec import (FULLFLEX, INFLEX, PARTFLEX, FlexSpec, HWConfig, OrderSpec,
                    ParallelSpec, ShapeSpec, TileSpec, perm_to_order_str)
@@ -51,11 +52,20 @@ def run_dse(layers: Sequence[Layer], candidates: Sequence[FlexSpec],
             cfg: Optional[GAConfig] = None, with_flexion: bool = False,
             flexion_samples: int = 20_000) -> List[DSEResult]:
     """Evaluate candidate accelerators; every DSE step includes a full MSE
-    per benchmark layer (paper Sec 2.4)."""
+    per benchmark layer (paper Sec 2.4).
+
+    With the batched engine, candidates sharing an HWConfig are searched in
+    ONE jitted dispatch (rows = specs x unique layers); results are
+    bit-identical to per-spec ``search_model`` calls."""
     cfg = cfg or GAConfig()
+    candidates = list(candidates)
+    if (cfg.engine == "batched" and len(candidates) > 1
+            and all(s.hw == candidates[0].hw for s in candidates)):
+        mres_list = search_specs_batched(layers, candidates, cfg)
+    else:
+        mres_list = [search_model(layers, spec, cfg) for spec in candidates]
     out = []
-    for spec in candidates:
-        mres = search_model(layers, spec, cfg)
+    for spec, mres in zip(candidates, mres_list):
         ar = area_model.area_of(spec)
         flexion = (model_flexion(spec, layers, flexion_samples)
                    if with_flexion else None)
@@ -162,20 +172,22 @@ def future_proofing_study(base_model: str = "alexnet",
         row[m] = res.runtime
     table["InFlex0000-X-Opt"] = row
 
-    # flexible variants of the 2014 design
-    for cs in class_strs:
-        spec = open_axes(frozen, cs, FULLFLEX)
-        row = {}
-        for m in future_models:
-            row[m] = search_model(get_model(m), spec, cfg).runtime
-        table[spec.name] = row
-
+    # flexible variants of the 2014 design; with the batched engine, each
+    # model's whole spec sweep is a few chunked engine dispatches
+    flex_specs = [open_axes(frozen, cs, FULLFLEX) for cs in class_strs]
     if include_partflex_1111:
-        spec = open_axes(frozen, "1111", PARTFLEX)
-        row = {}
-        for m in future_models:
-            row[m] = search_model(get_model(m), spec, cfg).runtime
-        table[spec.name] = row
+        flex_specs.append(open_axes(frozen, "1111", PARTFLEX))
+    for spec in flex_specs:
+        table[spec.name] = {}
+    for m in future_models:
+        layers = get_model(m)
+        if cfg.engine == "batched":
+            results = search_specs_batched(layers, flex_specs, cfg)
+        else:
+            results = [search_model(layers, spec, cfg)
+                       for spec in flex_specs]
+        for spec, mres in zip(flex_specs, results):
+            table[spec.name][m] = mres.runtime
 
     # normalize by the frozen baseline per column
     base_row = table[f"InFlex0000-{base_model}-Opt"]

@@ -1,0 +1,290 @@
+"""Batched multi-layer MSE engine: one jitted XLA program per model search.
+
+The paper's DSE loop (Sec 2.4 / Fig 6) runs a full map-space exploration per
+benchmark layer at *every* DSE step.  The serial mapper dispatches one
+``evaluate_population`` per layer per generation plus host-side numpy GA
+operators — ``L x generations`` device round-trips.  This engine stacks the
+GA state of all rows (a row = one (layer, spec) pair) into an ``(L, P, 9)``
+genome tensor and moves decode, cost evaluation, selection, crossover and
+mutation into a single ``jax.lax.fori_loop`` with a *traced* generation
+count, so one model-level MSE is exactly one XLA dispatch.
+
+Compile-once design (the whole fig7+fig13 suite shares one program):
+
+  * rows are processed in fixed-size chunks (``ROW_BUCKET``); short chunks
+    are padded with inert rows and large row sets are split, so any model /
+    spec-set reuses the same compiled program;
+  * O/P/S index tables are padded to the class-wide C_X maxima (720 orders,
+    30 pairs, |FullFlex shapes|) and indexed modulo their *true* lengths, so
+    InFlex / PartFlex / FullFlex specs all present identical shapes;
+  * the hard-partition flag is a traced per-row input, not a static;
+  * the generation count is a traced ``fori_loop`` bound; draw arrays are
+    zero-padded to a ``GEN_BUCKET`` multiple (never executed past the
+    bound).
+
+Randomness is drawn host-side (``ga_ops.draw_run``, one numpy Generator per
+row seeded with the serial mapper's convention) and shipped as scan inputs.
+A fully device-side ``jax.random`` variant was measured and rejected: on the
+CPU backend the threefry key derivation tripled both compile time and
+steady-state latency (see docs/mapper.md).
+
+Golden parity with ``mapper.search_model(engine="serial")`` is by
+construction: both engines consume the same per-row draw streams and apply
+the same ``ga_ops`` operator arithmetic (float32 mutate steps, stable
+argsort, strict-improve best tracking) — see tests/test_batched_engine.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import List, NamedTuple, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import ga_ops
+from .cost_model import CostResult, evaluate_mapping_impl
+from .ga_ops import GENOME_LEN, GenDraws
+from .mapspace import mapspace_for, padded_tables
+from .spec import FlexSpec, HWConfig
+from .workloads import Layer
+
+ROW_BUCKET = 64     # rows per program; larger row sets run in chunks
+GEN_BUCKET = 16     # draw arrays padded to a multiple of this
+TABLE_BUCKET = 8    # distinct spec table-sets per chunk, padded (shape-stable)
+
+
+def _bucket(n: int, base: int) -> int:
+    b = base
+    while b < n:
+        b *= 2
+    return b
+
+
+class RowResult(NamedTuple):
+    """Host-side per-row outcome of a batched GA run."""
+
+    best_genome: np.ndarray    # (9,) i32
+    best_obj: float
+    history: List[float]       # best objective per generation
+    runtime: float
+    energy: float
+    edp: float
+    util: float
+    dram_elems: float
+    feasible: bool
+
+
+@partial(jax.jit, static_argnames=("hw", "n_elite", "objective"))
+def _ga_program(dims, stride, depthwise, tile_lo, tile_hi, hard_partition,
+                table_id, orders, pairs, shapes, lens, pop0, draws, n_gens,
+                hw: HWConfig, n_elite: int, objective: str):
+    """The whole GA for all rows in one program.
+
+    Shapes: dims (L,6) stride (L,) depthwise (L,) tile_lo/hi (L,6)
+    hard_partition (L,) table_id (L,) orders (T,720,6) pairs (T,30,2)
+    shapes (T,S,2) lens (T,3) pop0 (L,P,9) draws leaves (Gp,L,Pc,...)
+    n_gens () traced.
+    """
+    n_rows, population, _ = pop0.shape
+    row_lens = lens[table_id]                        # (L, 3)
+    lo_b = tile_lo[:, None, :]
+    hi_b = tile_hi[:, None, :]
+    lens_b = row_lens[:, None, :]
+
+    def decode(pop):
+        oi = jnp.mod(pop[..., 6], row_lens[:, None, 0])
+        pi = jnp.mod(pop[..., 7], row_lens[:, None, 1])
+        si = jnp.mod(pop[..., 8], row_lens[:, None, 2])
+        tid = table_id[:, None]
+        return (pop[..., 0:6], orders[tid, oi], pairs[tid, pi],
+                shapes[tid, si])
+
+    def evaluate(pop) -> CostResult:
+        tiles, order, par, shape_rc = decode(pop)
+
+        def per_row(d_, s_, w_, hp_, t_, o_, p_, sh_):
+            def per_mapping(t1, o1, p1, s1):
+                return evaluate_mapping_impl(d_, s_, w_, t1, o1, p1, s1,
+                                             hw, hp_)
+            return jax.vmap(per_mapping)(t_, o_, p_, sh_)
+
+        return jax.vmap(per_row)(dims, stride, depthwise, hard_partition,
+                                 tiles, order, par, shape_rc)
+
+    def body(i, carry):
+        pop, best_obj, best_g, best_res, hist = carry
+        d = jax.tree_util.tree_map(lambda x: x[i], draws)
+        res = evaluate(pop)
+        obj = getattr(res, objective)                          # (L, P)
+        order_idx = jnp.argsort(obj, axis=1, stable=True)
+        gen_best = order_idx[:, 0]
+        gen_obj = jnp.take_along_axis(obj, gen_best[:, None], axis=1)[:, 0]
+        improved = gen_obj < best_obj
+        best_obj = jnp.where(improved, gen_obj, best_obj)
+        gen_g = jnp.take_along_axis(pop, gen_best[:, None, None],
+                                    axis=1)[:, 0]
+        best_g = jnp.where(improved[:, None], gen_g, best_g)
+        # carry the winner's full cost breakdown (cheaper than a second
+        # evaluate instance after the loop)
+        best_res = CostResult(*(
+            jnp.where(improved,
+                      jnp.take_along_axis(f, gen_best[:, None], axis=1)[:, 0],
+                      bf)
+            for f, bf in zip(res, best_res)))
+        hist = hist.at[i].set(best_obj)
+
+        elites = jnp.take_along_axis(pop, order_idx[:, :n_elite, None],
+                                     axis=1)
+        parent_idx = jnp.take_along_axis(order_idx, d.ranks, axis=1)
+        parents = jnp.take_along_axis(pop, parent_idx[..., None], axis=1)
+        children = ga_ops.apply_crossover(parents, d, jnp)
+        children = ga_ops.clip_genomes(children, lo_b, hi_b, lens_b, jnp)
+        children = ga_ops.apply_mutation(children, d, lo_b, hi_b, lens_b,
+                                         jnp)
+        pop = jnp.concatenate([elites, children], axis=1)
+        return pop, best_obj, best_g, best_res, hist
+
+    gens_pad = draws.step.shape[0]
+    zeros = jnp.zeros((n_rows,), jnp.float32)
+    carry0 = (pop0,
+              jnp.full((n_rows,), jnp.inf, jnp.float32),
+              pop0[:, 0, :],
+              CostResult(runtime=zeros, energy=zeros,
+                         feasible=jnp.zeros((n_rows,), jnp.bool_),
+                         util=zeros, dram_elems=zeros, l2_elems=zeros,
+                         edp=zeros),
+              jnp.full((gens_pad, n_rows), jnp.inf, jnp.float32))
+    _, best_obj, best_g, best, hist = jax.lax.fori_loop(0, n_gens, body,
+                                                        carry0)
+    return best_g, best_obj, hist, best
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineRow:
+    """One (layer, spec, seed) search request; seeds follow the serial
+    mapper's convention (``cfg.seed + 1000 * first_occurrence_index``)."""
+
+    layer: Layer
+    spec: FlexSpec
+    seed: int
+
+
+def run_batched_ga(rows: Sequence[EngineRow], cfg) -> List[RowResult]:
+    """Search all rows batched; returns per-row results in order.  All rows
+    must share an HWConfig (one static ``hw`` per program).
+
+    Row sets larger than ``ROW_BUCKET`` run in bucket-sized chunks so that
+    *every* call — any model, any number of specs — reuses the same compiled
+    program instead of forcing a bigger-shape recompile."""
+    assert rows, "need at least one row"
+    hw = rows[0].spec.hw
+    assert all(r.spec.hw == hw for r in rows), \
+        "batched rows must share an HWConfig"
+    out: List[RowResult] = []
+    for start in range(0, len(rows), ROW_BUCKET):
+        out.extend(_run_chunk(rows[start:start + ROW_BUCKET], cfg, hw))
+    return out
+
+
+def _run_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
+               ) -> List[RowResult]:
+    population = cfg.population
+    n_elite = ga_ops.n_elite(cfg)
+    n_children = population - n_elite
+    gens = cfg.generations
+    gens_pad = _bucket(max(gens, 1), GEN_BUCKET)
+    n_pad = ROW_BUCKET
+
+    # -- distinct padded table sets + per-row table id ----------------------
+    # The table axis is padded to TABLE_BUCKET so that any number of distinct
+    # specs (1..bucket) presents the same shapes — no recompile per spec-set.
+    spec_ids = {}
+    tables = []
+    table_id = np.zeros(n_pad, np.int32)
+    for i, row in enumerate(rows):
+        if row.spec not in spec_ids:
+            spec_ids[row.spec] = len(tables)
+            tables.append(padded_tables(row.spec))
+        table_id[i] = spec_ids[row.spec]
+    t_pad = _bucket(len(tables), TABLE_BUCKET)
+    orders = np.zeros((t_pad,) + tables[0].orders.shape, np.int32)
+    pairs = np.zeros((t_pad,) + tables[0].pairs.shape, np.int32)
+    shapes = np.zeros((t_pad,) + tables[0].shapes.shape, np.int32)
+    lens = np.ones((t_pad, 3), np.int32)
+    for ti, t in enumerate(tables):
+        orders[ti], pairs[ti], shapes[ti], lens[ti] = (t.orders, t.pairs,
+                                                       t.shapes, t.lens)
+
+    # -- per-row state + draws, inert-padded to the buckets -----------------
+    dims = np.ones((n_pad, 6), np.int32)
+    stride = np.ones(n_pad, np.int32)
+    depthwise = np.zeros(n_pad, np.bool_)
+    tile_lo = np.ones((n_pad, 6), np.int32)
+    tile_hi = np.ones((n_pad, 6), np.int32)
+    hard_partition = np.zeros(n_pad, np.bool_)
+    pop0 = np.ones((n_pad, population, GENOME_LEN), np.int32)
+    draw_stack = GenDraws(
+        ranks=np.zeros((gens_pad, n_pad, n_children), np.int32),
+        perm=np.zeros((gens_pad, n_pad, n_children), np.int32),
+        cross_mask=np.zeros((gens_pad, n_pad, n_children, GENOME_LEN),
+                            np.bool_),
+        cross_do=np.zeros((gens_pad, n_pad, n_children), np.bool_),
+        m_tile=np.zeros((gens_pad, n_pad, n_children, 6), np.bool_),
+        step=np.ones((gens_pad, n_pad, n_children, 6), np.float32),
+        snap=np.zeros((gens_pad, n_pad, n_children, 6), np.bool_),
+        dv=np.ones((gens_pad, n_pad, n_children, 6), np.int32),
+        m_idx=np.zeros((gens_pad, n_pad, n_children, 3), np.bool_),
+        walk=np.zeros((gens_pad, n_pad, n_children, 3), np.bool_),
+        stepdir=np.ones((gens_pad, n_pad, n_children, 3), np.int32),
+        sampled=np.zeros((gens_pad, n_pad, n_children, 3), np.int32),
+    )
+    for i, row in enumerate(rows):
+        space = mapspace_for(row.layer, row.spec)
+        rng = np.random.default_rng(row.seed)
+        pop0[i] = ga_ops.initial_population(rng, space, cfg)
+        row_draws = ga_ops.draw_run(rng, space, cfg, gens, n_children)
+        for field, stacked in zip(row_draws, draw_stack):
+            stacked[:gens, i] = field
+        dims[i] = space.dims
+        stride[i] = row.layer.stride
+        depthwise[i] = row.layer.depthwise
+        tile_lo[i] = space.tile_lo
+        tile_hi[i] = space.tile_hi
+        hard_partition[i] = space.hard_partition
+
+    best_g, best_obj, hist, best = _ga_program(
+        dims, stride, depthwise, tile_lo, tile_hi, hard_partition, table_id,
+        orders, pairs, shapes, lens, pop0, draw_stack, np.int32(gens),
+        hw=hw, n_elite=n_elite, objective=cfg.objective)
+
+    best_g = np.asarray(best_g)
+    best_obj = np.asarray(best_obj)
+    hist = np.asarray(hist)
+    best = CostResult(*(np.asarray(f) for f in best))
+
+    out = []
+    for i in range(len(rows)):
+        out.append(RowResult(
+            best_genome=best_g[i],
+            best_obj=float(best_obj[i]),
+            history=[float(v) for v in hist[:gens, i]],
+            runtime=float(best.runtime[i]),
+            energy=float(best.energy[i]),
+            edp=float(best.edp[i]),
+            util=float(best.util[i]),
+            dram_elems=float(best.dram_elems[i]),
+            feasible=bool(best.feasible[i]),
+        ))
+    return out
+
+
+def warmup_engine(cfg, hw: Optional[HWConfig] = None) -> None:
+    """Trigger the (one-time) engine compile for a GA budget outside any
+    timed region — e.g. before a benchmark loop."""
+    from .spec import make_variant
+    hw = hw or HWConfig()
+    row = EngineRow(Layer("warmup", (4, 4, 4, 4, 1, 1)),
+                    make_variant("1111", hw=hw), seed=0)
+    run_batched_ga([row], cfg)

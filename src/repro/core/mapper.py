@@ -10,21 +10,38 @@ classes and further inside PartFlex subsets:
     apply the hard-partition legality (tiles),
   * FullFlex axes roam the full constrained space C_X.
 
-Population evaluation is one vmapped jit over the analytical cost model, so
-the paper's 100x100 (10K sample) budget runs in well under a second per layer.
+Two interchangeable MSE engines sit behind ``GAConfig.engine``:
+
+  * ``"batched"`` (default): the whole model's GA — every unique layer's
+    population stacked into an (L, P, 9) tensor — runs as ONE jitted XLA
+    program per search (see repro.core.engine).
+  * ``"serial"``: the classic per-layer Python loop, one device dispatch per
+    layer per generation.
+
+Both engines consume identical random streams and operator arithmetic
+(repro.core.ga_ops), so they return bit-identical results for the same
+``GAConfig`` — the golden-parity property tested in
+tests/test_batched_engine.py.
 """
 from __future__ import annotations
 
 import dataclasses
+from functools import partial
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .cost_model import CostResult, evaluate_population
-from .mapspace import Mapping, MapSpace
+from . import ga_ops
+from .cost_model import (CostResult, evaluate_mapping_impl,
+                         evaluate_population, evaluate_rows)
+from .engine import ROW_BUCKET, EngineRow, _bucket, run_batched_ga
+from .mapspace import Mapping, MapSpace, mapspace_for
 from .spec import FlexSpec
 from .workloads import Layer, NUM_DIMS, layers_as_array
+
+ENGINES = ("batched", "serial")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,6 +54,12 @@ class GAConfig:
     tile_divisor_bias: float = 0.3  # GAMMA-style: snap tiles to divisors
     seed: int = 0
     objective: str = "runtime"  # runtime | energy | edp
+    engine: str = "batched"     # batched | serial (identical results)
+
+    def __post_init__(self):
+        if self.engine not in ENGINES:
+            raise ValueError(f"unknown engine {self.engine!r}; "
+                             f"expected one of {ENGINES}")
 
 
 @dataclasses.dataclass
@@ -61,108 +84,76 @@ def _objective_values(res: CostResult, objective: str) -> np.ndarray:
     return np.asarray(arr)
 
 
-def _divisors(n: int) -> np.ndarray:
-    n = int(n)
-    ds = [d for d in range(1, n + 1) if n % d == 0]
-    return np.asarray(ds, np.int32)
-
-
 class _Operators:
-    """Constraint-respecting GA operators over genome matrices (N, 9)."""
+    """Constraint-respecting GA operators over genome matrices (N, 9).
+
+    Thin host-side wrapper over the shared draw/apply functions in
+    ``ga_ops`` — the batched engine applies the identical arithmetic in JAX,
+    which is what keeps the two engines in exact agreement."""
 
     def __init__(self, space: MapSpace, cfg: GAConfig,
                  rng: np.random.Generator):
         self.space = space
         self.cfg = cfg
         self.rng = rng
-        self.divisors = [_divisors(space.dims[d]) for d in range(NUM_DIMS)]
 
     def mutate(self, g: np.ndarray) -> np.ndarray:
-        g = g.copy()
-        n = len(g)
-        rate = self.cfg.mutation_rate
-        sp = self.space
-        # tiles: geometric step, or divisor snap
-        for d in range(NUM_DIMS):
-            if sp.tile_lo[d] == sp.tile_hi[d]:
-                continue  # pinned (InFlex-T)
-            m = self.rng.random(n) < rate
-            step = np.exp(self.rng.normal(0.0, 0.7, n))
-            newv = np.maximum(1, np.round(g[:, d] * step)).astype(np.int64)
-            snap = self.rng.random(n) < self.cfg.tile_divisor_bias
-            dv = self.divisors[d][self.rng.integers(0, len(self.divisors[d]), n)]
-            newv = np.where(snap, dv, newv)
-            g[:, d] = np.where(m, newv, g[:, d])
-        # index genes: resample or +-1 walk
-        for gi, table_len in ((6, len(sp.order_table)),
-                              (7, len(sp.pair_table)),
-                              (8, len(sp.shape_table))):
-            if table_len <= 1:
-                continue  # pinned axis
-            m = self.rng.random(n) < rate
-            walk = self.rng.random(n) < 0.5
-            stepped = g[:, gi] + self.rng.choice([-1, 1], n)
-            sampled = self.rng.integers(0, table_len, n)
-            g[:, gi] = np.where(m, np.where(walk, stepped, sampled), g[:, gi])
-        return self.space.clip(g)
+        d = ga_ops.single_generation_draws(self.rng, self.space, self.cfg,
+                                           len(g))
+        return ga_ops.apply_mutation(np.asarray(g), d, self.space.tile_lo,
+                                     self.space.tile_hi,
+                                     self.space.table_lens(), np)
 
     def crossover(self, parents: np.ndarray) -> np.ndarray:
-        n = len(parents)
-        mates = parents[self.rng.permutation(n)]
-        mask = self.rng.random((n, self.space.GENOME_LEN)) < 0.5
-        do = (self.rng.random(n) < self.cfg.crossover_rate)[:, None]
-        children = np.where(do & mask, mates, parents)
-        return self.space.clip(children)
+        d = ga_ops.single_generation_draws(self.rng, self.space, self.cfg,
+                                           len(parents))
+        return self.space.clip(
+            ga_ops.apply_crossover(np.asarray(parents), d, np))
 
 
-def search(layer: Layer, spec: FlexSpec,
-           cfg: Optional[GAConfig] = None) -> MapperResult:
-    """MSE for one layer on one accelerator (paper Fig 6 inner loop)."""
-    cfg = cfg or GAConfig()
+def _search_serial(layer: Layer, spec: FlexSpec, cfg: GAConfig
+                   ) -> MapperResult:
+    """Per-layer GA with one device dispatch per generation (the reference
+    engine the batched one is held to)."""
     rng = np.random.default_rng(cfg.seed)
-    space = MapSpace(layer, spec)
-    ops = _Operators(space, cfg, rng)
+    space = mapspace_for(layer, spec)
+    pop = ga_ops.initial_population(rng, space, cfg)
+    n_elite = ga_ops.n_elite(cfg)
+    draws = ga_ops.draw_run(rng, space, cfg, cfg.generations,
+                            cfg.population - n_elite)
+    lens = space.table_lens()
 
     dims = jnp.asarray(layer.dims)
     stride = jnp.asarray(layer.stride)
     dw = jnp.asarray(layer.depthwise)
 
-    pop = space.sample(rng, cfg.population)
-    # seed the population with the baseline fixed mapping where legal
-    base = space.clip(np.concatenate([
-        np.minimum(np.asarray(spec.tile.fixed_tile, np.int32), space.dims),
-        [0, 0, 0]])[None, :])
-    pop[0] = base[0]
-
-    n_elite = max(1, int(cfg.elite_frac * cfg.population))
     best_hist: List[float] = []
     best_g: Optional[np.ndarray] = None
     best_obj = np.inf
     best_idx_res: Optional[Tuple[CostResult, int]] = None
 
-    for _ in range(cfg.generations):
+    for gen in range(cfg.generations):
         tiles, orders, pairs, shapes = space.decode_batch(pop)
         res = evaluate_population(
             dims, stride, dw, jnp.asarray(tiles), jnp.asarray(orders),
             jnp.asarray(pairs), jnp.asarray(shapes), spec.hw,
             space.hard_partition)
         obj = _objective_values(res, cfg.objective)
-        order_idx = np.argsort(obj)
+        order_idx = np.argsort(obj, kind="stable")
         if obj[order_idx[0]] < best_obj:
             best_obj = float(obj[order_idx[0]])
             best_g = pop[order_idx[0]].copy()
             best_idx_res = (res, int(order_idx[0]))
         best_hist.append(best_obj)
 
+        d = ga_ops.gen_slice(draws, gen)
         elites = pop[order_idx[:n_elite]]
-        # rank-based parent selection
-        ranks = np.empty(len(pop))
-        ranks[order_idx] = np.arange(len(pop))
-        probs = (len(pop) - ranks)
-        probs = probs / probs.sum()
-        parent_idx = rng.choice(len(pop), cfg.population - n_elite, p=probs)
-        children = ops.crossover(pop[parent_idx])
-        children = ops.mutate(children)
+        parents = pop[order_idx[d.ranks]]      # rank-based selection
+        children = ga_ops.apply_crossover(parents, d, np)
+        children = ga_ops.clip_genomes(children, space.tile_lo,
+                                       space.tile_hi, lens, np)
+        children = ga_ops.apply_mutation(children, d, space.tile_lo,
+                                         space.tile_hi, lens, np)
         pop = np.concatenate([elites, children], axis=0)
 
     assert best_g is not None and best_idx_res is not None
@@ -174,6 +165,26 @@ def search(layer: Layer, spec: FlexSpec,
         dram_elems=float(res.dram_elems[i]),
         feasible=bool(res.feasible[i]), history=best_hist,
     )
+
+
+def _row_to_result(layer: Layer, spec: FlexSpec, row) -> MapperResult:
+    space = mapspace_for(layer, spec)
+    return MapperResult(
+        mapping=space.decode(row.best_genome),
+        runtime=row.runtime, energy=row.energy, edp=row.edp,
+        util=row.util, dram_elems=row.dram_elems, feasible=row.feasible,
+        history=row.history,
+    )
+
+
+def search(layer: Layer, spec: FlexSpec,
+           cfg: Optional[GAConfig] = None) -> MapperResult:
+    """MSE for one layer on one accelerator (paper Fig 6 inner loop)."""
+    cfg = cfg or GAConfig()
+    if cfg.engine == "serial":
+        return _search_serial(layer, spec, cfg)
+    row = run_batched_ga([EngineRow(layer, spec, cfg.seed)], cfg)[0]
+    return _row_to_result(layer, spec, row)
 
 
 @dataclasses.dataclass
@@ -188,52 +199,197 @@ class ModelResult:
         return all(r.feasible for r in self.per_layer)
 
 
+def _dedup_key(layer: Layer) -> tuple:
+    """The spec-relevant layer fields — exactly what the cost model reads.
+    Layer *names* (and any future metadata) must never enter this key."""
+    return (layer.dims, layer.stride, layer.depthwise)
+
+
+def _model_result(results: Sequence[MapperResult]) -> ModelResult:
+    runtime = float(sum(r.runtime for r in results))
+    energy = float(sum(r.energy for r in results))
+    return ModelResult(per_layer=list(results), runtime=runtime,
+                       energy=energy, edp=runtime * energy)
+
+
 def search_model(layers: Sequence[Layer], spec: FlexSpec,
                  cfg: Optional[GAConfig] = None,
                  dedup: bool = True) -> ModelResult:
     """Per-layer MSE (flexible accelerators re-map every layer; paper Sec 3.1
-    scope: layers run sequentially).  Identical layer shapes share one search
-    (`dedup`) — ResNet-style nets repeat blocks heavily."""
+    scope: layers run sequentially).
+
+    Dedup cache: identical layer *shapes* share one search — ResNet-style
+    nets repeat blocks heavily.  The cache key is :func:`_dedup_key`, i.e.
+    only the spec-relevant fields ``(dims, stride, depthwise)``; layer names
+    are deliberately excluded, so two differently-named layers with equal
+    shapes resolve to the same (shared) MapperResult object.  Per-layer GA
+    seeds derive from the *first occurrence* index (``seed + 1000*i``), so
+    dedup changes no result, only how often the search runs.
+
+    ``cfg.engine`` selects the batched one-dispatch engine (default) or the
+    serial per-layer loop; both return identical results (golden parity).
+    """
     cfg = cfg or GAConfig()
+    if cfg.engine == "batched":
+        return search_model_batched(layers, spec, cfg, dedup=dedup)
     results: List[Optional[MapperResult]] = [None] * len(layers)
     seen: Dict[tuple, int] = {}
     for i, layer in enumerate(layers):
-        key = (layer.dims, layer.stride, layer.depthwise)
+        key = _dedup_key(layer)
         if dedup and key in seen:
             results[i] = results[seen[key]]
             continue
         lcfg = dataclasses.replace(cfg, seed=cfg.seed + 1000 * i)
         results[i] = search(layer, spec, lcfg)
         seen[key] = i
-    runtime = float(sum(r.runtime for r in results))
-    energy = float(sum(r.energy for r in results))
-    return ModelResult(per_layer=results, runtime=runtime, energy=energy,
-                       edp=runtime * energy)
+    return _model_result(results)
+
+
+def search_model_batched(layers: Sequence[Layer], spec: FlexSpec,
+                         cfg: Optional[GAConfig] = None,
+                         dedup: bool = True) -> ModelResult:
+    """Batched MSE: all unique layers' GAs run in ONE jitted XLA program
+    (an (L, P, 9) genome tensor through a fori_loop over generations) —
+    see repro.core.engine.  Same dedup cache and per-layer seeds as the
+    serial loop, hence bit-identical results."""
+    cfg = cfg or GAConfig()
+    row_index: List[int] = []              # first-occurrence layer index
+    seen: Dict[tuple, int] = {}            # dedup key -> row position
+    for i, layer in enumerate(layers):
+        key = _dedup_key(layer)
+        if dedup and key in seen:
+            continue
+        seen[key] = len(row_index)
+        row_index.append(i)
+    rows = [EngineRow(layers[i], spec, cfg.seed + 1000 * i)
+            for i in row_index]
+    row_results = run_batched_ga(rows, cfg)
+    per_row = [_row_to_result(layers[i], spec, r)
+               for i, r in zip(row_index, row_results)]
+    results: List[MapperResult] = []
+    for layer in layers:
+        if dedup:
+            results.append(per_row[seen[_dedup_key(layer)]])
+        else:
+            results.append(per_row[len(results)])
+    return _model_result(results)
+
+
+def search_specs_batched(layers: Sequence[Layer],
+                         specs: Sequence[FlexSpec],
+                         cfg: Optional[GAConfig] = None,
+                         dedup: bool = True) -> List[ModelResult]:
+    """MSE for several candidate accelerators *sharing an HWConfig* in one
+    jitted dispatch: the engine's row axis carries (spec, unique-layer)
+    pairs, with per-row padded tables and hard-partition flags.  Each spec's
+    ModelResult is bit-identical to its own ``search_model_batched`` call
+    (same per-layer seeds and draw streams)."""
+    cfg = cfg or GAConfig()
+    all_rows: List[EngineRow] = []
+    meta: List[Tuple[List[int], Dict[tuple, int]]] = []
+    for spec in specs:
+        row_index: List[int] = []
+        seen: Dict[tuple, int] = {}
+        for i, layer in enumerate(layers):
+            key = _dedup_key(layer)
+            if dedup and key in seen:
+                continue
+            seen[key] = len(row_index)
+            row_index.append(i)
+        meta.append((row_index, seen))
+        all_rows.extend(EngineRow(layers[i], spec, cfg.seed + 1000 * i)
+                        for i in row_index)
+    row_results = run_batched_ga(all_rows, cfg)
+    out: List[ModelResult] = []
+    pos = 0
+    for spec, (row_index, seen) in zip(specs, meta):
+        chunk = row_results[pos:pos + len(row_index)]
+        pos += len(row_index)
+        per_row = [_row_to_result(layers[i], spec, r)
+                   for i, r in zip(row_index, chunk)]
+        if dedup:
+            results = [per_row[seen[_dedup_key(l)]] for l in layers]
+        else:
+            results = per_row
+        out.append(_model_result(results))
+    return out
 
 
 def evaluate_fixed_genome(layers: Sequence[Layer], spec: FlexSpec,
                           genome: np.ndarray) -> ModelResult:
-    """Run ONE mapping config on every layer (what an InFlex accel does)."""
-    per_layer = []
-    for layer in layers:
-        space = MapSpace(layer, spec)
-        g = genome[None, :].copy()
-        tiles, orders, pairs, shapes = space.decode_batch(space.clip(g))
-        res = evaluate_population(
-            jnp.asarray(layer.dims), jnp.asarray(layer.stride),
-            jnp.asarray(layer.depthwise), jnp.asarray(tiles),
-            jnp.asarray(orders), jnp.asarray(pairs), jnp.asarray(shapes),
-            spec.hw, space.hard_partition)
-        per_layer.append(MapperResult(
-            mapping=space.decode(space.clip(g)[0]),
-            runtime=float(res.runtime[0]), energy=float(res.energy[0]),
-            edp=float(res.edp[0]), util=float(res.util[0]),
-            dram_elems=float(res.dram_elems[0]),
-            feasible=bool(res.feasible[0]), history=[]))
-    runtime = float(sum(r.runtime for r in per_layer))
-    energy = float(sum(r.energy for r in per_layer))
-    return ModelResult(per_layer=per_layer, runtime=runtime, energy=energy,
-                       edp=runtime * energy)
+    """Run ONE mapping config on every layer (what an InFlex accel does).
+    All layers evaluate in a single batched dispatch (padded to the engine's
+    row bucket so every model shares one compiled program)."""
+    n = len(layers)
+    n_pad = _bucket(max(n, 1), ROW_BUCKET)
+    dims = np.ones((n_pad, 6), np.int32)
+    stride = np.ones(n_pad, np.int32)
+    dw = np.zeros(n_pad, np.bool_)
+    tiles = np.ones((n_pad, 6), np.int32)
+    orders = np.tile(np.arange(NUM_DIMS, dtype=np.int32), (n_pad, 1))
+    pairs = np.tile(np.asarray([0, 1], np.int32), (n_pad, 1))
+    shapes = np.ones((n_pad, 2), np.int32)
+    hp = np.zeros(n_pad, np.bool_)
+    mappings = []
+    for i, layer in enumerate(layers):
+        space = mapspace_for(layer, spec)
+        g = space.clip(np.asarray(genome)[None, :])
+        t, o, p, s = space.decode_batch(g)
+        tiles[i], orders[i], pairs[i], shapes[i] = t[0], o[0], p[0], s[0]
+        dims[i] = space.dims
+        stride[i] = layer.stride
+        dw[i] = layer.depthwise
+        hp[i] = space.hard_partition
+        mappings.append(space.decode(g[0]))
+    res = evaluate_rows(dims, stride, dw, tiles, orders, pairs, shapes, hp,
+                        spec.hw)
+    res = CostResult(*(np.asarray(f) for f in res))
+    per_layer = [MapperResult(
+        mapping=mappings[i],
+        runtime=float(res.runtime[i]), energy=float(res.energy[i]),
+        edp=float(res.edp[i]), util=float(res.util[i]),
+        dram_elems=float(res.dram_elems[i]),
+        feasible=bool(res.feasible[i]), history=[]) for i in range(n)]
+    return _model_result(per_layer)
+
+
+def raw_tile_feasibility(tiles: jnp.ndarray,
+                         buffer_elems: float) -> jnp.ndarray:
+    """Hard-coded loop bounds must fit the buffer for ANY workload (tiles
+    only ever clip DOWN on a layer): otherwise the hardened design would be
+    unbuildable/unrunnable on future models.  tiles: (P, 6) raw genome tile
+    genes; returns a (P,) bool mask."""
+    t = tiles.astype(jnp.float32)
+    in_vol = t[:, 1] * (t[:, 2] - 1 + t[:, 4]) * (t[:, 3] - 1 + t[:, 5])
+    w_vol = t[:, 0] * t[:, 1] * t[:, 4] * t[:, 5]
+    o_vol = t[:, 0] * t[:, 2] * t[:, 3]
+    return (in_vol + w_vol + o_vol) <= buffer_elems
+
+
+@partial(jax.jit, static_argnames=("hw", "hard_partition", "objective"))
+def _fixed_config_objective(dims, strides, dws, mask, tiles, orders, pairs,
+                            shapes, hw, hard_partition: bool,
+                            objective: str):
+    """Whole-model objective of one shared mapping population — layer sweep,
+    buffer-feasibility penalty and reduction all inside one jit (the serial
+    version round-tripped raw tiles through host numpy every generation)."""
+
+    def per_layer(d, s, w):
+        def per_mapping(t1, o1, p1, s1):
+            return evaluate_mapping_impl(d, s, w, t1, o1, p1, s1, hw,
+                                         hard_partition)
+        return jax.vmap(per_mapping)(tiles, orders, pairs, shapes)
+
+    res = jax.vmap(per_layer)(dims, strides, dws)        # (L, P) fields
+    m = mask[:, None].astype(jnp.float32)
+    runtime = jnp.sum(res.runtime * m, axis=0)
+    energy = jnp.sum(res.energy * m, axis=0)
+    penalty = jnp.where(
+        raw_tile_feasibility(tiles, jnp.float32(hw.buffer_elems)), 0.0, 1e30)
+    runtime = runtime + penalty
+    energy = energy + penalty
+    return {"runtime": runtime, "energy": energy,
+            "edp": runtime * energy}[objective]
 
 
 def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
@@ -242,7 +398,9 @@ def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
     """DSE for an *inflexible* accelerator: find the single TOPS config that
     minimizes whole-model runtime (paper Sec 7, InFlex-0000-X-Opt).
 
-    The genome is shared across layers; per-layer tile clipping applies."""
+    The genome is shared across layers; per-layer tile clipping applies.
+    Layers are padded to the engine row bucket so every model reuses one
+    compiled objective."""
     cfg = cfg or GAConfig()
     rng = np.random.default_rng(cfg.seed)
     # use the largest layer's space for sampling bounds
@@ -251,54 +409,36 @@ def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
     space = MapSpace(probe, spec)
     ops = _Operators(space, cfg, rng)
 
-    dims = jnp.asarray(dims_mat)
-    strides = jnp.asarray([l.stride for l in layers])
-    dws = jnp.asarray([l.depthwise for l in layers])
-
-    import jax
-
-    def raw_tile_feasible(tiles):
-        """Hard-coded loop bounds must fit the buffer for ANY workload
-        (tiles only ever clip DOWN on a layer): otherwise the hardened
-        design would be unbuildable/unrunnable on future models."""
-        t = tiles.astype(np.float64)
-        in_vol = t[:, 1] * (t[:, 2] - 1 + t[:, 4]) * (t[:, 3] - 1 + t[:, 5])
-        w_vol = t[:, 0] * t[:, 1] * t[:, 4] * t[:, 5]
-        o_vol = t[:, 0] * t[:, 2] * t[:, 3]
-        return (in_vol + w_vol + o_vol) <= spec.hw.buffer_elems
-
-    def pop_model_obj(tiles, orders, pairs, shapes):
-        def per_layer(d, s, w):
-            return evaluate_population(d, s, w, tiles, orders, pairs, shapes,
-                                       spec.hw, space.hard_partition)
-        res = jax.vmap(per_layer)(dims, strides, dws)  # (L, P) fields
-        runtime = jnp.sum(res.runtime, axis=0)
-        energy = jnp.sum(res.energy, axis=0)
-        penalty = jnp.where(jnp.asarray(raw_tile_feasible(
-            np.asarray(tiles))), 0.0, 1e30)
-        runtime = runtime + penalty
-        energy = energy + penalty
-        return runtime, energy, runtime * energy
+    n = len(layers)
+    n_pad = _bucket(max(n, 1), ROW_BUCKET)
+    dims = np.ones((n_pad, 6), np.int32)
+    dims[:n] = dims_mat
+    strides = np.ones(n_pad, np.int32)
+    strides[:n] = [l.stride for l in layers]
+    dws = np.zeros(n_pad, np.bool_)
+    dws[:n] = [l.depthwise for l in layers]
+    mask = np.zeros(n_pad, np.bool_)
+    mask[:n] = True
 
     pop = space.sample(rng, cfg.population)
-    n_elite = max(1, int(cfg.elite_frac * cfg.population))
+    n_elite = ga_ops.n_elite(cfg)
+    n_children = cfg.population - n_elite
     best_obj, best_g = np.inf, None
     for _ in range(cfg.generations):
         tiles, orders, pairs, shapes = space.decode_batch(pop)
-        rt, en, edp = pop_model_obj(jnp.asarray(tiles), jnp.asarray(orders),
-                                    jnp.asarray(pairs), jnp.asarray(shapes))
-        obj = np.asarray({"runtime": rt, "energy": en, "edp": edp}
-                         [cfg.objective])
-        order_idx = np.argsort(obj)
+        obj = np.asarray(_fixed_config_objective(
+            dims, strides, dws, mask, jnp.asarray(tiles),
+            jnp.asarray(orders), jnp.asarray(pairs), jnp.asarray(shapes),
+            hw=spec.hw, hard_partition=space.hard_partition,
+            objective=cfg.objective))
+        order_idx = np.argsort(obj, kind="stable")
         if obj[order_idx[0]] < best_obj:
             best_obj = float(obj[order_idx[0]])
             best_g = pop[order_idx[0]].copy()
         elites = pop[order_idx[:n_elite]]
-        ranks = np.empty(len(pop))
-        ranks[order_idx] = np.arange(len(pop))
-        probs = (len(pop) - ranks) / np.sum(len(pop) - ranks)
-        parent_idx = rng.choice(len(pop), cfg.population - n_elite, p=probs)
-        children = ops.mutate(ops.crossover(pop[parent_idx]))
+        ranks = rng.choice(cfg.population, n_children,
+                           p=ga_ops.rank_probs(cfg.population))
+        children = ops.mutate(ops.crossover(pop[order_idx[ranks]]))
         pop = np.concatenate([elites, children], axis=0)
 
     assert best_g is not None

@@ -15,12 +15,32 @@ with buffer constraints by Monte-Carlo estimation in flexion.py.
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional, Tuple
+from functools import lru_cache
+from typing import NamedTuple, Optional, Tuple
 
 import numpy as np
 
-from .spec import FlexSpec, HWConfig, INFLEX
+from .ga_ops import clip_genomes
+from .spec import FULLFLEX, FlexSpec, HWConfig, INFLEX, ShapeSpec
 from .workloads import Layer, NUM_DIMS
+
+
+# Table construction is pure in the (frozen, hashable) axis specs, and the
+# FullFlex order table alone is 720 rows — cache per spec rather than per
+# MapSpace instance (a batched model search builds one MapSpace per layer).
+@lru_cache(maxsize=512)
+def _order_table(order_spec) -> np.ndarray:
+    return order_spec.order_table()
+
+
+@lru_cache(maxsize=512)
+def _pair_table(parallel_spec) -> np.ndarray:
+    return parallel_spec.pair_table()
+
+
+@lru_cache(maxsize=512)
+def _shape_table(shape_spec, num_pes: int) -> np.ndarray:
+    return shape_spec.shape_table(num_pes)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -53,9 +73,9 @@ class MapSpace:
         self.layer = layer
         self.spec = spec
         self.dims = np.asarray(layer.dims, dtype=np.int32)
-        self.order_table = spec.order.order_table()
-        self.pair_table = spec.parallel.pair_table()
-        self.shape_table = spec.shape.shape_table(spec.hw.num_pes)
+        self.order_table = _order_table(spec.order)
+        self.pair_table = _pair_table(spec.parallel)
+        self.shape_table = _shape_table(spec.shape, spec.hw.num_pes)
         if spec.tile.flex == INFLEX:
             fixed = np.minimum(np.asarray(spec.tile.fixed_tile, np.int32),
                                self.dims)
@@ -86,31 +106,36 @@ class MapSpace:
 
     # -- random sampling (respects per-axis flexibility) ---------------------
     def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
-        g = np.zeros((n, self.GENOME_LEN), np.int32)
-        for d in range(NUM_DIMS):
-            g[:, d] = rng.integers(self.tile_lo[d], self.tile_hi[d] + 1, n)
-        g[:, 6] = rng.integers(0, len(self.order_table), n)
-        g[:, 7] = rng.integers(0, len(self.pair_table), n)
-        g[:, 8] = rng.integers(0, len(self.shape_table), n)
-        return g
+        """Uniform legal genomes via one bulk uniform draw (the batched
+        engine samples one population per row, so this is a hot path)."""
+        lo = np.concatenate([self.tile_lo, np.zeros(3, np.int64)])
+        span = np.concatenate([(self.tile_hi - self.tile_lo + 1).astype(
+            np.int64), self.table_lens().astype(np.int64)])
+        u = rng.random((n, self.GENOME_LEN))
+        return (lo + u * span).astype(np.int32)
+
+    def table_lens(self) -> np.ndarray:
+        """(3,) true lengths of the order / pair / shape tables."""
+        return np.asarray([len(self.order_table), len(self.pair_table),
+                           len(self.shape_table)], np.int32)
 
     def clip(self, genomes: np.ndarray) -> np.ndarray:
-        """Project genomes back into the legal (axis-constrained) space."""
-        g = np.asarray(genomes).copy()
-        g[:, 0:6] = np.clip(g[:, 0:6], self.tile_lo, self.tile_hi)
-        g[:, 6] = np.mod(g[:, 6], len(self.order_table))
-        g[:, 7] = np.mod(g[:, 7], len(self.pair_table))
-        g[:, 8] = np.mod(g[:, 8], len(self.shape_table))
-        return g
+        """Project genomes back into the legal (axis-constrained) space.
+        Accepts any leading batch shape ``(..., 9)``."""
+        return clip_genomes(np.asarray(genomes), self.tile_lo, self.tile_hi,
+                            self.table_lens(), np)
 
     # -- decoded arrays for the vectorized cost model ------------------------
     def decode_batch(self, genomes: np.ndarray
                      ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Decode genomes of any leading shape ``(..., 9)`` into the arrays
+        the cost model consumes: tiles ``(..., 6)``, orders ``(..., 6)``,
+        pairs ``(..., 2)``, shapes ``(..., 2)``."""
         g = np.asarray(genomes)
-        tiles = g[:, 0:6].astype(np.int32)
-        orders = self.order_table[np.mod(g[:, 6], len(self.order_table))]
-        pairs = self.pair_table[np.mod(g[:, 7], len(self.pair_table))]
-        shapes = self.shape_table[np.mod(g[:, 8], len(self.shape_table))]
+        tiles = g[..., 0:6].astype(np.int32)
+        orders = self.order_table[np.mod(g[..., 6], len(self.order_table))]
+        pairs = self.pair_table[np.mod(g[..., 7], len(self.pair_table))]
+        shapes = self.shape_table[np.mod(g[..., 8], len(self.shape_table))]
         return tiles, orders, pairs, shapes
 
     # -- axis-space cardinalities (exact where tractable) ---------------------
@@ -127,6 +152,56 @@ class MapSpace:
     def size_upper_bound(self) -> float:
         c = self.axis_cardinalities()
         return float(c["T"]) * c["O"] * c["P"] * c["S"]
+
+
+@lru_cache(maxsize=4096)
+def mapspace_for(layer: Layer, spec: FlexSpec) -> MapSpace:
+    """Cached MapSpace factory for the hot DSE paths (layers and specs are
+    frozen/hashable; a Fig-13-style sweep rebuilds the same spaces hundreds
+    of times otherwise)."""
+    return MapSpace(layer, spec)
+
+
+class PaddedTables(NamedTuple):
+    """One spec's O/P/S index tables padded to the class-wide C_X maxima.
+
+    Padding rows (zeros) are never read: the engines index tables modulo the
+    *true* lengths in ``lens``.  Because the padded shapes depend only on
+    ``hw`` (720 orders, 30 pairs, |FullFlex shape table| shapes), every spec
+    sharing an HWConfig produces identically-shaped arrays — the batched
+    engine therefore compiles exactly one XLA program per HWConfig instead of
+    one per (spec, model) pair.
+    """
+
+    orders: np.ndarray   # (720, 6) i32
+    pairs: np.ndarray    # (30, 2) i32
+    shapes: np.ndarray   # (S_max(hw), 2) i32
+    lens: np.ndarray     # (3,) i32 true table lengths
+
+
+@lru_cache(maxsize=64)
+def _num_fullflex_shapes(num_pes: int) -> int:
+    return len(ShapeSpec(flex=FULLFLEX).shape_table(num_pes))
+
+
+def _pad_rows(table: np.ndarray, rows: int) -> np.ndarray:
+    out = np.zeros((rows, table.shape[1]), np.int32)
+    out[: len(table)] = table
+    return out
+
+
+@lru_cache(maxsize=512)
+def padded_tables(spec: FlexSpec) -> PaddedTables:
+    orders = _order_table(spec.order)
+    pairs = _pair_table(spec.parallel)
+    shapes = _shape_table(spec.shape, spec.hw.num_pes)
+    lens = np.asarray([len(orders), len(pairs), len(shapes)], np.int32)
+    return PaddedTables(
+        orders=_pad_rows(orders, 720),
+        pairs=_pad_rows(pairs, 30),
+        shapes=_pad_rows(shapes, _num_fullflex_shapes(spec.hw.num_pes)),
+        lens=lens,
+    )
 
 
 def _row_index(table: np.ndarray, row: np.ndarray) -> int:

@@ -1,0 +1,126 @@
+"""Golden-parity and behaviour tests for the batched MSE engine.
+
+The contract (ISSUE 2): with a fixed seed and identical GAConfig,
+``search_model_batched`` and the serial ``search_model`` return *identical*
+best objectives per layer — any silent cost-model or operator drift during
+the engine refactor trips these tests.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import (FULLFLEX, GAConfig, PARTFLEX, inflex_baseline,
+                        make_variant, run_dse, search, search_model,
+                        search_model_batched, search_specs_batched)
+from repro.core import mapper as mapper_mod
+from repro.core.workloads import Layer, get_model
+
+# the paper's quoted MnasNet layers 1 and 29
+LAYER1 = Layer("mnas.layer1", (32, 3, 224, 224, 3, 3))
+LAYER29 = Layer("mnas.layer29", (1, 480, 14, 14, 5, 5), depthwise=True)
+LAYERS = [LAYER1, LAYER29]
+
+CFG = GAConfig(population=16, generations=6, seed=7)
+SERIAL = dataclasses.replace(CFG, engine="serial")
+BATCHED = dataclasses.replace(CFG, engine="batched")
+
+SPECS = {
+    "InFlex": inflex_baseline(),
+    "PartFlex": make_variant("1111", PARTFLEX),
+    "FullFlex": make_variant("1111", FULLFLEX),
+}
+
+
+def _assert_identical(a, b):
+    """Exact (bitwise) agreement of two MapperResults."""
+    assert a.runtime == b.runtime
+    assert a.energy == b.energy
+    assert a.edp == b.edp
+    assert a.util == b.util
+    assert a.dram_elems == b.dram_elems
+    assert a.feasible == b.feasible
+    assert a.history == b.history
+    assert a.mapping == b.mapping
+
+
+@pytest.mark.parametrize("flex", sorted(SPECS))
+def test_golden_parity_search_model(flex):
+    spec = SPECS[flex]
+    serial = search_model(LAYERS, spec, SERIAL)
+    batched = search_model_batched(LAYERS, spec, CFG)
+    assert serial.runtime == batched.runtime
+    assert serial.energy == batched.energy
+    for rs, rb in zip(serial.per_layer, batched.per_layer):
+        _assert_identical(rs, rb)
+
+
+def test_golden_parity_single_layer_search():
+    for spec in SPECS.values():
+        _assert_identical(search(LAYER29, spec, SERIAL),
+                          search(LAYER29, spec, BATCHED))
+
+
+def test_engine_default_is_batched_and_validated():
+    assert GAConfig().engine == "batched"
+    with pytest.raises(ValueError):
+        GAConfig(engine="warp-drive")
+
+
+def test_search_specs_batched_matches_per_spec():
+    specs = [SPECS["InFlex"], SPECS["FullFlex"]]
+    combined = search_specs_batched(LAYERS, specs, CFG)
+    for spec, mres in zip(specs, combined):
+        solo = search_model_batched(LAYERS, spec, CFG)
+        assert mres.runtime == solo.runtime
+        for ra, rb in zip(mres.per_layer, solo.per_layer):
+            _assert_identical(ra, rb)
+
+
+def test_run_dse_batches_shared_hw_candidates():
+    specs = [SPECS["InFlex"], SPECS["PartFlex"]]
+    rows = run_dse(LAYERS, specs, CFG)
+    for spec, r in zip(specs, rows):
+        solo = search_model(LAYERS, spec, CFG)
+        assert r.runtime == solo.runtime
+
+
+def test_dedup_shares_search_across_equal_shapes(monkeypatch):
+    """Two layers with equal (dims, stride, depthwise) but different names
+    must share ONE search (regression for the dedup cache key)."""
+    twins = [Layer("conv_a", (64, 32, 28, 28, 3, 3)),
+             Layer("conv_b_other_name", (64, 32, 28, 28, 3, 3))]
+    spec = SPECS["FullFlex"]
+
+    calls = []
+    real = mapper_mod.run_batched_ga
+
+    def counting(rows, cfg):
+        calls.append(len(rows))
+        return real(rows, cfg)
+
+    monkeypatch.setattr(mapper_mod, "run_batched_ga", counting)
+    res = search_model(twins, spec, CFG)
+    assert calls == [1]                       # one engine row for both
+    assert res.per_layer[0] is res.per_layer[1]
+
+    # serial engine: one _search_serial invocation for the pair
+    serial_calls = []
+    real_serial = mapper_mod._search_serial
+
+    def counting_serial(layer, sp, cfg):
+        serial_calls.append(layer.name)
+        return real_serial(layer, sp, cfg)
+
+    monkeypatch.setattr(mapper_mod, "_search_serial", counting_serial)
+    res_s = search_model(twins, spec, SERIAL)
+    assert serial_calls == ["conv_a"]
+    assert res_s.per_layer[0] is res_s.per_layer[1]
+
+
+def test_dedup_off_matches_dedup_on_for_unique_layers():
+    layers = get_model("ncf")  # all-unique GEMM tower
+    spec = SPECS["FullFlex"]
+    a = search_model_batched(layers, spec, CFG, dedup=True)
+    b = search_model_batched(layers, spec, CFG, dedup=False)
+    assert a.runtime == b.runtime

@@ -2,11 +2,12 @@
 import numpy as np
 import pytest
 
-from repro.core import (FULLFLEX, GAConfig, INFLEX, PARTFLEX, area_of,
-                        design_fixed_accelerator, evaluate_mapping,
+from repro.core import (FULLFLEX, GAConfig, HWConfig, INFLEX, PARTFLEX,
+                        area_of, design_fixed_accelerator, evaluate_mapping,
                         get_model, inflex_baseline, make_variant, open_axes,
-                        search, search_model)
-from repro.core.mapper import evaluate_fixed_genome
+                        raw_tile_feasibility, search, search_model)
+from repro.core.mapper import evaluate_fixed_genome, search_fixed_config
+from repro.core.spec import FlexSpec
 from repro.core.workloads import Layer
 
 CFG = GAConfig(population=32, generations=12, seed=0)
@@ -78,6 +79,41 @@ def test_open_axes_names_and_classes():
     base = evaluate_fixed_genome(get_model("ncf"), spec, genome)
     flex = search_model(get_model("ncf"), open_axes(spec, "1111"), CFG)
     assert flex.runtime <= base.runtime * 1.001
+
+
+def test_raw_tile_feasibility_mask():
+    """The buffer-feasibility penalty's predicate: raw genome tiles whose
+    I+W+O volumes overflow hw.buffer_elems are flagged infeasible."""
+    hw = HWConfig()  # 100K elements
+    tiles = np.asarray([
+        [64, 16, 3, 3, 3, 3],        # baseline config: tiny, fits
+        [1024, 1024, 224, 224, 11, 11],  # absurd: overflows by orders
+        [64, 16, 14, 14, 3, 3],      # mid-size: ~26K elements, fits
+        [1, 480, 14, 14, 5, 5],      # dw 5x5: input volume 155K, overflows
+    ], np.int32)
+    ok = np.asarray(raw_tile_feasibility(tiles, float(hw.buffer_elems)))
+    assert ok.tolist() == [True, False, True, False]
+    # threshold is exact: a genome right at the boundary stays feasible
+    t = np.asarray([[1, 1, 100, 1, 1, 1]], np.int32)  # vols: 100+1+100=201
+    assert bool(raw_tile_feasibility(t, 201.0)[0])
+    assert not bool(raw_tile_feasibility(t, 200.0)[0])
+
+
+def test_fixed_config_rejects_buffer_overflow_genomes():
+    """search_fixed_config's jitted objective must never return a genome
+    whose *raw* tiles overflow the buffer — even on a tiny buffer where most
+    of the sampled population is infeasible — and the returned genome must
+    be feasible on every layer of the model."""
+    hw = HWConfig(buffer_bytes=4 * 1024)     # 4K elements: tight
+    spec = FlexSpec(name="tiny-buffer", hw=hw)
+    layers = get_model("ncf")
+    genome, res = search_fixed_config(
+        layers, spec, GAConfig(population=32, generations=12, seed=3))
+    assert bool(np.asarray(raw_tile_feasibility(
+        genome[None, 0:6].astype(np.int32), float(hw.buffer_elems)))[0])
+    assert res.feasible                       # every layer, post-clipping
+    for r in res.per_layer:
+        assert r.feasible
 
 
 def test_area_monotone_in_flexibility():
