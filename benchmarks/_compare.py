@@ -1,0 +1,34 @@
+"""Shared derived-metric comparison for the BENCH parity gates.
+
+One definition of "same derived metrics" used by both the in-process gate
+in ``benchmarks.run`` (bit-exact across engine passes) and the cross-machine
+anchor diff in ``scripts/diff_bench.py`` (optionally rtol-relaxed), so the
+two gates cannot silently diverge.  Dependency-free on purpose: the diff
+script must not drag in the bench modules (and their jax import) just to
+compare two JSON files.
+"""
+from __future__ import annotations
+
+import math
+
+
+def public_derived(derived: dict) -> dict:
+    """Derived metrics without "_"-prefixed sidecar entries (phase timings
+    ride along in bench results under ``_phases``)."""
+    return {k: v for k, v in derived.items() if not k.startswith("_")}
+
+
+def value_match(a, b, rtol: float = 0.0) -> bool:
+    """One metric value: exact by default (NaN == NaN), rtol-relaxed floats
+    when asked."""
+    if isinstance(a, float) and isinstance(b, float):
+        if math.isnan(a) and math.isnan(b):
+            return True
+        if rtol > 0.0:
+            return math.isclose(a, b, rel_tol=rtol, abs_tol=0.0)
+    return a == b
+
+
+def derived_equal(a: dict, b: dict, rtol: float = 0.0) -> bool:
+    """Two derived-metric dicts agree on keys and every value."""
+    return set(a) == set(b) and all(value_match(a[k], b[k], rtol) for k in a)

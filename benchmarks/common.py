@@ -8,8 +8,6 @@ from typing import Dict, List, Optional
 from repro.core import GAConfig, Layer, get_model
 
 # Budgets: FAST (tests / CI smoke), DEFAULT (bench runs), FULL (paper 100x100)
-_MODE = os.environ.get("REPRO_BENCH_MODE", "default")
-
 BUDGETS = {
     "fast": GAConfig(population=24, generations=10),
     "default": GAConfig(population=48, generations=30),
@@ -18,22 +16,35 @@ BUDGETS = {
 
 
 def bench_mode() -> str:
-    return _MODE
+    """Current REPRO_BENCH_MODE — read lazily (per call, not at import) so
+    tests and multi-pass runners can flip the env between runs."""
+    return os.environ.get("REPRO_BENCH_MODE", "default")
+
+
+def campaign_mode() -> bool:
+    """True when REPRO_CAMPAIGN is set: benches with a cross-model campaign
+    path (fig7, fig13) batch their whole sweep into one engine row set —
+    ``benchmarks.run --campaign`` runs a pass with this on."""
+    return os.environ.get("REPRO_CAMPAIGN", "") not in ("", "0")
 
 
 def ga_budget(scale: float = 1.0) -> GAConfig:
     """The GA budget for the current REPRO_BENCH_MODE; REPRO_ENGINE
     (batched | serial) overrides the MSE engine, which is how
-    ``benchmarks.run --engines`` A/B-times the two engines."""
+    ``benchmarks.run --engines`` A/B-times the two engines.  Campaign mode
+    forces the batched engine and turns on chunk pipelining (host draw prep
+    overlapped with device compute)."""
     import dataclasses
-    base = BUDGETS[_MODE]
+    base = BUDGETS[bench_mode()]
     engine = os.environ.get("REPRO_ENGINE")
     if engine:
         base = dataclasses.replace(base, engine=engine)
-    if scale == 1.0:
-        return base
-    return dataclasses.replace(
-        base, generations=max(4, int(base.generations * scale)))
+    if campaign_mode():
+        base = dataclasses.replace(base, engine="batched", pipeline=True)
+    if scale != 1.0:
+        base = dataclasses.replace(
+            base, generations=max(4, int(base.generations * scale)))
+    return base
 
 
 def find_layer(model: str, dims) -> Layer:

@@ -7,27 +7,30 @@ FullFlex-1111 gains 11.8x geomean on future DNNs.
 """
 from __future__ import annotations
 
-import os
-
 from repro.core import future_proofing_study, geomean_speedup
 
-from .common import Table, ga_budget
-
-FULL = os.environ.get("REPRO_BENCH_MODE", "default") == "full"
+from .common import Table, bench_mode, campaign_mode, ga_budget
 
 CLASSES_DEFAULT = ("1000", "0100", "0010", "0001", "0011", "1100", "1111")
 CLASSES_FULL = ("1000", "0100", "0010", "0001", "0011", "0101", "1001",
                 "0110", "1010", "1100", "1110", "1011", "0111", "1101",
                 "1111")
 
+# the sweep's model set (run.py sizes the campaign warmup off this)
+MODELS = ("alexnet", "mnasnet", "resnet50", "mobilenetv2", "bert",
+          "dlrm", "ncf")
+
 
 def run(print_fn=print):
     cfg = ga_budget(scale=0.5)
-    models = ("alexnet", "mnasnet", "resnet50", "mobilenetv2", "bert",
-              "dlrm", "ncf")
+    campaign = campaign_mode()
+    models = MODELS
+    timings = {}
     table = future_proofing_study(
         base_model="alexnet", future_models=models,
-        class_strs=CLASSES_FULL if FULL else CLASSES_DEFAULT, cfg=cfg)
+        class_strs=CLASSES_FULL if bench_mode() == "full"
+        else CLASSES_DEFAULT,
+        cfg=cfg, campaign=campaign, timings=timings)
 
     t = Table("Fig 13 — runtime normalized to InFlex0000-Alexnet-Opt",
               ["accel"] + list(models) + ["geomean_speedup"])
@@ -40,10 +43,13 @@ def run(print_fn=print):
 
     full_row = next(r for r in table if r.startswith("FullFlex1111"))
     future = [m for m in models if m != "alexnet"]
-    return {
+    out = {
         "fullflex1111_geomean_future": geomean_speedup(table, full_row,
                                                        future),
         "fullflex1111_geomean_all": derived.get(full_row, float("nan")),
         "beats_inflex_everywhere": all(
             table[full_row][m] <= 1.001 for m in models),
     }
+    if campaign:
+        out["_phases"] = timings
+    return out

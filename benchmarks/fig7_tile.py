@@ -10,17 +10,20 @@ sweep run as chunked (layer, spec) rows through one compiled GA program.
 from __future__ import annotations
 
 import dataclasses
+import time
 
 from repro.core import (FULLFLEX, PARTFLEX, compute_flexion, get_model,
-                        inflex_baseline, make_variant, search, search_model,
-                        search_specs_batched)
+                        inflex_baseline, make_variant, search,
+                        search_campaign, search_model, search_specs_batched)
 
-from .common import MNASNET_LAYERS, Table, find_layer, ga_budget
+from .common import (MNASNET_LAYERS, Table, campaign_mode, find_layer,
+                     ga_budget)
 
 
 def run(print_fn=print):
     layers = get_model("mnasnet")
     cfg = ga_budget()
+    campaign = campaign_mode()
     accels = [
         ("InFlex1000", inflex_baseline()),
         ("PartFlex1000", make_variant("1000", PARTFLEX)),
@@ -36,10 +39,22 @@ def run(print_fn=print):
               ["accel", "layer", "runtime_rel", "energy_rel", "edp_rel",
                "H-F(T)", "W-F(T)", "chosen_tile"])
     derived = {}
+    timings = {}
 
-    # per-layer columns: one batched MSE over all (layer, accel) rows
+    # per-layer columns: one batched MSE over all (layer, accel) rows; the
+    # campaign packs them AND the end-to-end model sweep into one row set
     quoted_layers = [find_layer("mnasnet", dims) for _, dims in quoted]
-    if cfg.engine == "batched":
+    t0 = time.time()
+    if campaign:
+        reqs = ([(quoted_layers, spec) for spec in specs]
+                + [(layers, spec) for spec in specs])
+        all_res = search_campaign(reqs, cfg)
+        per_spec = all_res[:len(specs)]
+        model_res = dict(zip((a for a, _ in accels), all_res[len(specs):]))
+        results = {(a, ln): per_spec[ai].per_layer[li]
+                   for ai, (a, _) in enumerate(accels)
+                   for li, (ln, _) in enumerate(quoted)}
+    elif cfg.engine == "batched":
         per_spec = search_specs_batched(quoted_layers, specs, cfg)
         results = {(a, ln): per_spec[ai].per_layer[li]
                    for ai, (a, _) in enumerate(accels)
@@ -52,6 +67,9 @@ def run(print_fn=print):
             layer, spec, dataclasses.replace(cfg, seed=cfg.seed + 1000 * li))
             for a, spec in accels
             for li, ((ln, _), layer) in enumerate(zip(quoted, quoted_layers))}
+    timings["mse_campaign" if campaign else "mse_quoted"] = round(
+        time.time() - t0, 6)
+    t0 = time.time()
     for li, (lname, dims) in enumerate(quoted):
         layer = quoted_layers[li]
         base = results[("InFlex1000", lname)]
@@ -63,13 +81,20 @@ def run(print_fn=print):
                   fx.per_axis_hf["T"], fx.per_axis_wf["T"],
                   str(r.mapping.tiles))
 
-    # end-to-end model
-    if cfg.engine == "batched":
+    timings["flexion"] = round(time.time() - t0, 6)
+
+    # end-to-end model (already searched by the campaign row set above)
+    t0 = time.time()
+    if campaign:
+        pass
+    elif cfg.engine == "batched":
         model_res = dict(zip((a for a, _ in accels),
                              search_specs_batched(layers, specs, cfg)))
     else:
         model_res = {a: search_model(layers, spec, cfg)
                      for a, spec in accels}
+    if not campaign:
+        timings["mse_model"] = round(time.time() - t0, 6)
     model_rt = {}
     for aname, _ in accels:
         res = model_res[aname]
@@ -88,4 +113,6 @@ def run(print_fn=print):
                               <= model_rt["PartFlex1000"] * 1.001
                               and model_rt["PartFlex1000"]
                               <= model_rt["InFlex1000"] * 1.001)
+    if campaign:
+        derived["_phases"] = timings
     return derived

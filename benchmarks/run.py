@@ -7,15 +7,21 @@ of the whole table/figure reproduction; derived = its headline metric).
   PYTHONPATH=src python -m benchmarks.run table3 fig7     # a subset
   REPRO_BENCH_MODE=fast|default|full                      # GA budgets
   REPRO_ENGINE=batched|serial                             # MSE engine
+  REPRO_CAMPAIGN=1                                        # campaign batching
 
 Machine-readable perf trajectory:
 
-  python -m benchmarks.run fig7 fig13 --engines serial,batched \
+  python -m benchmarks.run fig7 fig13 --engines serial,batched --campaign \
       --json BENCH_mapper.json
 
-runs every selected bench once per engine and writes a BENCH JSON artifact
-(per-bench ``us_per_call`` + derived metrics + engine + speedups) so future
-PRs can diff mapper performance instead of guessing.
+runs every selected bench once per engine — ``--campaign`` adds a third
+pass through the cross-model campaign path (batched engine + chunk
+pipelining + whole-sweep row sets, with per-phase timings) — and writes a
+BENCH JSON artifact (per-bench ``us_per_call`` + derived metrics + phases +
+speedups) so future PRs can diff mapper performance instead of guessing.
+
+All passes must agree on every derived metric (the engines' golden-parity
+contract); any mismatch makes the run exit nonzero so CI gates on it.
 """
 from __future__ import annotations
 
@@ -28,7 +34,8 @@ import traceback
 from . import (bridge_validation, fig7_tile, fig8_buffer, fig9_order,
                fig10_parallelism, fig11_shape, fig12_arraysize,
                fig13_futureproof, roofline, table3_area)
-from .common import bench_mode
+from ._compare import derived_equal, public_derived
+from .common import bench_mode, campaign_mode
 
 BENCHES = {
     "table3": (table3_area, "fullflex_overhead_pct"),
@@ -43,7 +50,13 @@ BENCHES = {
     "bridge": (bridge_validation, "long_decode_speedup"),
 }
 
-BENCH_SCHEMA = "repro-bench-mapper/v1"
+BENCH_SCHEMA = "repro-bench-mapper/v2"
+
+# benches whose derived metrics are pure functions of the MSE engines (the
+# golden-parity gate only covers these; roofline/bridge read external
+# artifacts and table3 never touches the mapper)
+PARITY_BENCHES = {"fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+                  "fig13"}
 
 
 def _warm_engine(engine: str) -> None:
@@ -58,22 +71,29 @@ def _warm_engine(engine: str) -> None:
     import dataclasses
 
     from repro.core import (Layer, PARTFLEX, make_variant, search,
-                            search_fixed_config)
+                            search_fixed_config, search_fixed_configs)
     from repro.core.engine import warmup_engine
 
     from .common import ga_budget
 
     cfg = ga_budget()
     tiny = Layer("warmup", (4, 4, 4, 4, 1, 1))
-    if engine == "batched":
+    if engine in ("batched", "campaign"):
         warmup_engine(cfg)
     else:
         scfg = dataclasses.replace(cfg, engine="serial", generations=2)
         search(tiny, make_variant("1111"), scfg)
         search(tiny, make_variant("1111", PARTFLEX), scfg)
     # shared jits (fixed-config objective + batched fixed-genome eval)
-    search_fixed_config([tiny], make_variant("1111"),
-                        dataclasses.replace(cfg, generations=2))
+    wcfg = dataclasses.replace(cfg, generations=2)
+    search_fixed_config([tiny], make_variant("1111"), wcfg)
+    if engine == "campaign":
+        # the model-stacked fixed-config program at the campaign's padded
+        # model-axis shape: fig13 designs its whole model set in one call,
+        # so warm with the same request count (same power-of-two bucket)
+        from .fig13_futureproof import MODELS
+        search_fixed_configs([([tiny], make_variant("1111"))] * len(MODELS),
+                             wcfg)
 
 
 def _run_once(names):
@@ -97,9 +117,20 @@ def _run_once(names):
     return csv_rows, results, failed
 
 
+def _speedup_row(rows_a, rows_b):
+    speedup = {}
+    total_a = total_b = 0.0
+    for (name, us_a, _), (_, us_b, _) in zip(rows_a, rows_b):
+        speedup[name] = round(us_a / max(us_b, 1.0), 2)
+        total_a += us_a
+        total_b += us_b
+    speedup["total"] = round(total_a / max(total_b, 1.0), 2)
+    return speedup
+
+
 def _bench_json(engine_rows, engine_results):
-    """BENCH artifact: per-engine per-bench us_per_call + derived metrics,
-    plus serial/batched speedups when both engines ran."""
+    """BENCH artifact: per-pass per-bench us_per_call + derived metrics (+
+    campaign phase timings), plus pairwise speedups between passes."""
     doc = {
         "schema": BENCH_SCHEMA,
         "bench_mode": bench_mode(),
@@ -108,21 +139,22 @@ def _bench_json(engine_rows, engine_results):
         "engines": {},
     }
     for engine, rows in engine_rows.items():
-        doc["engines"][engine] = {
-            name: {"us_per_call": round(us, 1),
-                   "derived": engine_results[engine].get(name, {})}
-            for name, us, _ in rows
-        }
-    if {"serial", "batched"} <= set(engine_rows):
-        speedup = {}
-        total_s = total_b = 0.0
-        for (name, us_s, _), (_, us_b, _) in zip(engine_rows["serial"],
-                                                 engine_rows["batched"]):
-            speedup[name] = round(us_s / max(us_b, 1.0), 2)
-            total_s += us_s
-            total_b += us_b
-        speedup["total"] = round(total_s / max(total_b, 1.0), 2)
-        doc["speedup_serial_over_batched"] = speedup
+        entry = {}
+        for name, us, _ in rows:
+            derived = engine_results[engine].get(name, {})
+            cell = {"us_per_call": round(us, 1),
+                    "derived": public_derived(derived)}
+            if "_phases" in derived:
+                cell["phases"] = {k: round(v * 1e6, 1)   # us, like us_per_call
+                                  for k, v in derived["_phases"].items()}
+            entry[name] = cell
+        doc["engines"][engine] = entry
+    for a, b, key in (("serial", "batched", "speedup_serial_over_batched"),
+                      ("batched", "campaign",
+                       "speedup_batched_over_campaign"),
+                      ("serial", "campaign", "speedup_serial_over_campaign")):
+        if {a, b} <= set(engine_rows):
+            doc[key] = _speedup_row(engine_rows[a], engine_rows[b])
     return doc
 
 
@@ -148,6 +180,7 @@ def main(argv=None) -> int:
     _enable_persistent_jax_cache()
     json_path = None
     engines = None
+    campaign = False
     rest = []
     it = iter(argv)
     for a in it:
@@ -160,17 +193,31 @@ def main(argv=None) -> int:
                 json_path = value
             else:
                 engines = [e.strip() for e in value.split(",") if e.strip()]
+        elif a == "--campaign":
+            campaign = True
         else:
             rest.append(a)
     names = [a for a in rest if a in BENCHES] or list(BENCHES)
-    engines = engines or [os.environ.get("REPRO_ENGINE", "batched")]
+    if engines is None:
+        # a plain `REPRO_CAMPAIGN=1 python -m benchmarks.run` IS a campaign
+        # run (the per-pass env setup below would otherwise clear the flag)
+        engines = (["campaign"] if campaign_mode()
+                   else [os.environ.get("REPRO_ENGINE", "batched")])
+    if campaign and "campaign" not in engines:
+        engines.append("campaign")
 
     engine_rows = {}
     engine_results = {}
     failed = 0
     prev_engine = os.environ.get("REPRO_ENGINE")
+    prev_campaign = os.environ.get("REPRO_CAMPAIGN")
     for engine in engines:
-        os.environ["REPRO_ENGINE"] = engine
+        if engine == "campaign":
+            os.environ["REPRO_ENGINE"] = "batched"
+            os.environ["REPRO_CAMPAIGN"] = "1"
+        else:
+            os.environ["REPRO_ENGINE"] = engine
+            os.environ.pop("REPRO_CAMPAIGN", None)
         try:
             _warm_engine(engine)
         except Exception:  # noqa: BLE001 - warmup is best-effort
@@ -179,10 +226,28 @@ def main(argv=None) -> int:
         engine_rows[engine] = rows
         engine_results[engine] = results
         failed += nfail
-    if prev_engine is None:
-        os.environ.pop("REPRO_ENGINE", None)
-    else:
-        os.environ["REPRO_ENGINE"] = prev_engine
+    for var, prev in (("REPRO_ENGINE", prev_engine),
+                      ("REPRO_CAMPAIGN", prev_campaign)):
+        if prev is None:
+            os.environ.pop(var, None)
+        else:
+            os.environ[var] = prev
+
+    # golden-parity gate: every pass must derive identical metrics on the
+    # engine-driven benches.  A mismatch is a real engine bug (the batched/
+    # campaign paths promise bit-identical results), so it must fail the
+    # run, not just print.
+    base = engines[0]
+    for engine in engines[1:]:
+        for name in names:
+            if name not in PARITY_BENCHES:
+                continue
+            da = public_derived(engine_results[base].get(name, {}))
+            db = public_derived(engine_results[engine].get(name, {}))
+            if not derived_equal(da, db):
+                failed += 1
+                print(f"PARITY MISMATCH {name}: [{base}] {da} != "
+                      f"[{engine}] {db}", file=sys.stderr)
 
     os.makedirs("results", exist_ok=True)
     with open("results/bench_results.json", "w") as f:

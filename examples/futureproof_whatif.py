@@ -20,6 +20,7 @@ for row, cols in table.items():
           + f"{gm:12.2f}")
 
 future = [m for m in models if m != "alexnet"]
-gm = geomean_speedup(table, "FullFlex1111-Alexnet-Opt", future)
+full_row = next(r for r in table if r.startswith("FullFlex1111"))
+gm = geomean_speedup(table, full_row, future)
 print(f"\nFullFlex-1111 future-proofing geomean on future models: {gm:.1f}x"
       f"  (paper reports 11.8x over its 7-model suite)")

@@ -1,0 +1,80 @@
+"""Diff the derived metrics of two BENCH JSON artifacts.
+
+  python scripts/diff_bench.py BENCH_smoke.json BENCH_mapper.json
+
+Compares, for every (engine, bench) pair present in BOTH files, the derived
+paper metrics ("_"-prefixed sidecar keys like phase timings are ignored) and
+exits nonzero on any mismatch — CI's bench-smoke job runs this against the
+committed ``BENCH_mapper.json`` so a silent metric drift fails the build.
+Timings (``us_per_call``) are intentionally NOT compared: they are
+machine-dependent; the derived metrics are the deterministic contract.
+
+``--rtol`` relaxes the float comparison (default 0 = bit-identical); it is
+an escape hatch for cross-platform float drift, not the normal mode.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+
+from benchmarks._compare import public_derived, value_match  # noqa: E402
+
+
+def _metrics(cell):
+    return public_derived(cell.get("derived", {}))
+
+
+def diff(new: dict, anchor: dict, rtol: float = 0.0):
+    """Yields (engine, bench, key, new_value, anchor_value) mismatches."""
+    for engine, benches in new.get("engines", {}).items():
+        anchor_benches = anchor.get("engines", {}).get(engine, {})
+        for bench, cell in benches.items():
+            if bench not in anchor_benches:
+                continue
+            got = _metrics(cell)
+            want = _metrics(anchor_benches[bench])
+            for key in sorted(set(got) | set(want)):
+                a, b = got.get(key), want.get(key)
+                if not value_match(a, b, rtol):
+                    yield engine, bench, key, a, b
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("new", help="freshly generated BENCH JSON")
+    ap.add_argument("anchor", help="committed anchor BENCH JSON")
+    ap.add_argument("--rtol", type=float, default=0.0,
+                    help="relative float tolerance (default: bit-identical)")
+    args = ap.parse_args(argv)
+    with open(args.new) as f:
+        new = json.load(f)
+    with open(args.anchor) as f:
+        anchor = json.load(f)
+
+    mismatches = list(diff(new, anchor, args.rtol))
+    compared = sum(1 for e, b in
+                   ((e, b) for e, bs in new.get("engines", {}).items()
+                    for b in bs)
+                   if b in anchor.get("engines", {}).get(e, {}))
+    if not compared:
+        print("error: no overlapping (engine, bench) pairs to compare",
+              file=sys.stderr)
+        return 2
+    for engine, bench, key, a, b in mismatches:
+        print(f"MISMATCH [{engine}] {bench}.{key}: {a!r} != anchor {b!r}",
+              file=sys.stderr)
+    if mismatches:
+        print(f"{len(mismatches)} derived-metric mismatch(es) across "
+              f"{compared} compared cells", file=sys.stderr)
+        return 1
+    print(f"OK: derived metrics match the anchor across {compared} "
+          f"(engine, bench) cells")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -11,7 +11,9 @@ from .dse import (DSEResult, design_fixed_accelerator, future_proofing_study,
 from .engine import EngineRow, RowResult, run_batched_ga, warmup_engine
 from .flexion import FlexionReport, compute_flexion, model_flexion
 from .mapper import (GAConfig, MapperResult, ModelResult,
-                     raw_tile_feasibility, search, search_fixed_config,
+                     evaluate_fixed_genome, evaluate_fixed_genome_many,
+                     raw_tile_feasibility, search, search_campaign,
+                     search_fixed_config, search_fixed_configs,
                      search_model, search_model_batched,
                      search_specs_batched)
 from .mapspace import Mapping, MapSpace, mapspace_for, workload_space_size
@@ -27,9 +29,10 @@ __all__ = [
     "design_fixed_accelerator", "future_proofing_study", "geomean_speedup",
     "open_axes", "run_dse", "EngineRow", "RowResult", "run_batched_ga",
     "warmup_engine", "FlexionReport", "compute_flexion", "model_flexion",
-    "GAConfig", "MapperResult", "ModelResult", "raw_tile_feasibility",
-    "search", "search_fixed_config", "search_model", "search_model_batched",
-    "search_specs_batched",
+    "GAConfig", "MapperResult", "ModelResult", "evaluate_fixed_genome",
+    "evaluate_fixed_genome_many", "raw_tile_feasibility", "search",
+    "search_campaign", "search_fixed_config", "search_fixed_configs",
+    "search_model", "search_model_batched", "search_specs_batched",
     "Mapping", "MapSpace", "mapspace_for", "workload_space_size",
     "FULLFLEX", "INFLEX", "PARTFLEX", "FlexSpec", "HWConfig", "OrderSpec",
     "ParallelSpec", "ShapeSpec", "TileSpec", "inflex_baseline",

@@ -171,28 +171,70 @@ class EngineRow:
     seed: int
 
 
+class ChunkInputs(NamedTuple):
+    """Host-side arrays of one padded engine chunk, ready to dispatch."""
+
+    dims: np.ndarray
+    stride: np.ndarray
+    depthwise: np.ndarray
+    tile_lo: np.ndarray
+    tile_hi: np.ndarray
+    hard_partition: np.ndarray
+    table_id: np.ndarray
+    orders: np.ndarray
+    pairs: np.ndarray
+    shapes: np.ndarray
+    lens: np.ndarray
+    pop0: np.ndarray
+    draws: GenDraws
+    gens: int
+
+
 def run_batched_ga(rows: Sequence[EngineRow], cfg) -> List[RowResult]:
     """Search all rows batched; returns per-row results in order.  All rows
     must share an HWConfig (one static ``hw`` per program).
 
     Row sets larger than ``ROW_BUCKET`` run in bucket-sized chunks so that
     *every* call — any model, any number of specs — reuses the same compiled
-    program instead of forcing a bigger-shape recompile."""
+    program instead of forcing a bigger-shape recompile.
+
+    With ``cfg.pipeline`` the chunk loop is software-pipelined: chunk ``i``
+    is dispatched (JAX dispatch is asynchronous) and while the device crunches
+    it, the host assembles chunk ``i+1``'s draw streams — the host-side hot
+    path of a campaign-sized row set — before blocking on chunk ``i``'s
+    results.  Scheduling only; per-chunk inputs and outputs are unchanged, so
+    results stay bit-identical to the unpipelined loop."""
     assert rows, "need at least one row"
     hw = rows[0].spec.hw
     assert all(r.spec.hw == hw for r in rows), \
         "batched rows must share an HWConfig"
+    chunks = [rows[start:start + ROW_BUCKET]
+              for start in range(0, len(rows), ROW_BUCKET)]
     out: List[RowResult] = []
-    for start in range(0, len(rows), ROW_BUCKET):
-        out.extend(_run_chunk(rows[start:start + ROW_BUCKET], cfg, hw))
+    if getattr(cfg, "pipeline", False):
+        in_flight = None           # (n_rows, gens, device outputs)
+        for chunk in chunks:
+            inputs = _prepare_chunk(chunk, cfg, hw)
+            outputs = _dispatch_chunk(inputs, cfg, hw)
+            if in_flight is not None:
+                out.extend(_collect_chunk(*in_flight))
+            in_flight = (len(chunk), inputs.gens, outputs)
+        out.extend(_collect_chunk(*in_flight))
+    else:
+        for chunk in chunks:
+            inputs = _prepare_chunk(chunk, cfg, hw)
+            out.extend(_collect_chunk(len(chunk), inputs.gens,
+                                      _dispatch_chunk(inputs, cfg, hw)))
     return out
 
 
-def _run_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
-               ) -> List[RowResult]:
+def _prepare_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
+                   ) -> ChunkInputs:
+    """Assemble one chunk's padded host arrays (tables, populations, draw
+    streams).  Pure host work — under ``cfg.pipeline`` it overlaps the
+    previous chunk's device compute."""
     population = cfg.population
-    n_elite = ga_ops.n_elite(cfg)
-    n_children = population - n_elite
+    n_children = population - ga_ops.n_elite(cfg)
     gens = cfg.generations
     gens_pad = _bucket(max(gens, 1), GEN_BUCKET)
     n_pad = ROW_BUCKET
@@ -225,21 +267,7 @@ def _run_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
     tile_hi = np.ones((n_pad, 6), np.int32)
     hard_partition = np.zeros(n_pad, np.bool_)
     pop0 = np.ones((n_pad, population, GENOME_LEN), np.int32)
-    draw_stack = GenDraws(
-        ranks=np.zeros((gens_pad, n_pad, n_children), np.int32),
-        perm=np.zeros((gens_pad, n_pad, n_children), np.int32),
-        cross_mask=np.zeros((gens_pad, n_pad, n_children, GENOME_LEN),
-                            np.bool_),
-        cross_do=np.zeros((gens_pad, n_pad, n_children), np.bool_),
-        m_tile=np.zeros((gens_pad, n_pad, n_children, 6), np.bool_),
-        step=np.ones((gens_pad, n_pad, n_children, 6), np.float32),
-        snap=np.zeros((gens_pad, n_pad, n_children, 6), np.bool_),
-        dv=np.ones((gens_pad, n_pad, n_children, 6), np.int32),
-        m_idx=np.zeros((gens_pad, n_pad, n_children, 3), np.bool_),
-        walk=np.zeros((gens_pad, n_pad, n_children, 3), np.bool_),
-        stepdir=np.ones((gens_pad, n_pad, n_children, 3), np.int32),
-        sampled=np.zeros((gens_pad, n_pad, n_children, 3), np.int32),
-    )
+    draw_stack = ga_ops.empty_draw_stack(gens_pad, n_pad, n_children)
     for i, row in enumerate(rows):
         space = mapspace_for(row.layer, row.spec)
         rng = np.random.default_rng(row.seed)
@@ -254,18 +282,34 @@ def _run_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
         tile_hi[i] = space.tile_hi
         hard_partition[i] = space.hard_partition
 
-    best_g, best_obj, hist, best = _ga_program(
-        dims, stride, depthwise, tile_lo, tile_hi, hard_partition, table_id,
-        orders, pairs, shapes, lens, pop0, draw_stack, np.int32(gens),
-        hw=hw, n_elite=n_elite, objective=cfg.objective)
+    return ChunkInputs(dims=dims, stride=stride, depthwise=depthwise,
+                       tile_lo=tile_lo, tile_hi=tile_hi,
+                       hard_partition=hard_partition, table_id=table_id,
+                       orders=orders, pairs=pairs, shapes=shapes, lens=lens,
+                       pop0=pop0, draws=draw_stack, gens=gens)
 
+
+def _dispatch_chunk(c: ChunkInputs, cfg, hw: HWConfig):
+    """Launch the chunk's GA program; returns device arrays without blocking
+    (JAX async dispatch), so the caller can overlap further host work."""
+    return _ga_program(
+        c.dims, c.stride, c.depthwise, c.tile_lo, c.tile_hi,
+        c.hard_partition, c.table_id, c.orders, c.pairs, c.shapes, c.lens,
+        c.pop0, c.draws, np.int32(c.gens),
+        hw=hw, n_elite=ga_ops.n_elite(cfg), objective=cfg.objective)
+
+
+def _collect_chunk(n_rows: int, gens: int, outputs) -> List[RowResult]:
+    """Materialize a dispatched chunk (blocks on the device) and unpack the
+    live rows."""
+    best_g, best_obj, hist, best = outputs
     best_g = np.asarray(best_g)
     best_obj = np.asarray(best_obj)
     hist = np.asarray(hist)
     best = CostResult(*(np.asarray(f) for f in best))
 
     out = []
-    for i in range(len(rows)):
+    for i in range(n_rows):
         out.append(RowResult(
             best_genome=best_g[i],
             best_obj=float(best_obj[i]),

@@ -59,6 +59,28 @@ def gen_slice(draws: GenDraws, g: int) -> GenDraws:
     return GenDraws(*(f[g] for f in draws))
 
 
+def empty_draw_stack(gens_pad: int, n_rows: int, n_children: int) -> GenDraws:
+    """Inert (zero/one) draw arrays for a padded engine chunk: rows past the
+    true row count and generations past the fori_loop bound are never
+    executed, so their contents only need shape-stable placeholders.  Shared
+    by every chunk-preparation path (plain and pipelined)."""
+    shape = (gens_pad, n_rows, n_children)
+    return GenDraws(
+        ranks=np.zeros(shape, np.int32),
+        perm=np.zeros(shape, np.int32),
+        cross_mask=np.zeros(shape + (GENOME_LEN,), np.bool_),
+        cross_do=np.zeros(shape, np.bool_),
+        m_tile=np.zeros(shape + (NUM_DIMS,), np.bool_),
+        step=np.ones(shape + (NUM_DIMS,), np.float32),
+        snap=np.zeros(shape + (NUM_DIMS,), np.bool_),
+        dv=np.ones(shape + (NUM_DIMS,), np.int32),
+        m_idx=np.zeros(shape + (3,), np.bool_),
+        walk=np.zeros(shape + (3,), np.bool_),
+        stepdir=np.ones(shape + (3,), np.int32),
+        sampled=np.zeros(shape + (3,), np.int32),
+    )
+
+
 @lru_cache(maxsize=4096)
 def divisors(n: int) -> np.ndarray:
     n = int(n)

@@ -55,6 +55,9 @@ class GAConfig:
     seed: int = 0
     objective: str = "runtime"  # runtime | energy | edp
     engine: str = "batched"     # batched | serial (identical results)
+    pipeline: bool = False      # overlap host draw prep with device compute
+                                # across engine chunks (scheduling only —
+                                # results are bit-identical either way)
 
     def __post_init__(self):
         if self.engine not in ENGINES:
@@ -275,19 +278,26 @@ def search_model_batched(layers: Sequence[Layer], spec: FlexSpec,
     return _model_result(results)
 
 
-def search_specs_batched(layers: Sequence[Layer],
-                         specs: Sequence[FlexSpec],
-                         cfg: Optional[GAConfig] = None,
-                         dedup: bool = True) -> List[ModelResult]:
-    """MSE for several candidate accelerators *sharing an HWConfig* in one
-    jitted dispatch: the engine's row axis carries (spec, unique-layer)
-    pairs, with per-row padded tables and hard-partition flags.  Each spec's
-    ModelResult is bit-identical to its own ``search_model_batched`` call
-    (same per-layer seeds and draw streams)."""
+def search_campaign(requests: Sequence[Tuple[Sequence[Layer], FlexSpec]],
+                    cfg: Optional[GAConfig] = None,
+                    dedup: bool = True) -> List[ModelResult]:
+    """Campaign MSE: many whole-model searches — arbitrary (layers, spec)
+    pairs sharing an HWConfig — as ONE engine row set.
+
+    This is the batch shape of the paper's Sec 7 replay (one frozen design's
+    variants swept across every future DNN): the engine packs all
+    (model, spec, unique-layer) rows into full ``ROW_BUCKET`` chunks instead
+    of padding each model/spec call separately, and with ``cfg.pipeline``
+    each chunk's host draw prep overlaps the previous chunk's device
+    compute.  Per-request results are bit-identical to per-request
+    ``search_model_batched`` calls: rows keep the same per-layer dedup and
+    seed convention (``cfg.seed + 1000 * first_occurrence_index``), and rows
+    are independent, so packing them differently changes nothing."""
     cfg = cfg or GAConfig()
+    requests = [(list(layers), spec) for layers, spec in requests]
     all_rows: List[EngineRow] = []
     meta: List[Tuple[List[int], Dict[tuple, int]]] = []
-    for spec in specs:
+    for layers, spec in requests:
         row_index: List[int] = []
         seen: Dict[tuple, int] = {}
         for i, layer in enumerate(layers):
@@ -302,7 +312,7 @@ def search_specs_batched(layers: Sequence[Layer],
     row_results = run_batched_ga(all_rows, cfg)
     out: List[ModelResult] = []
     pos = 0
-    for spec, (row_index, seen) in zip(specs, meta):
+    for (layers, spec), (row_index, seen) in zip(requests, meta):
         chunk = row_results[pos:pos + len(row_index)]
         pos += len(row_index)
         per_row = [_row_to_result(layers[i], spec, r)
@@ -315,42 +325,106 @@ def search_specs_batched(layers: Sequence[Layer],
     return out
 
 
+def search_specs_batched(layers: Sequence[Layer],
+                         specs: Sequence[FlexSpec],
+                         cfg: Optional[GAConfig] = None,
+                         dedup: bool = True) -> List[ModelResult]:
+    """MSE for several candidate accelerators *sharing an HWConfig* in one
+    jitted dispatch: the engine's row axis carries (spec, unique-layer)
+    pairs, with per-row padded tables and hard-partition flags.  Each spec's
+    ModelResult is bit-identical to its own ``search_model_batched`` call
+    (same per-layer seeds and draw streams).  One-model special case of
+    :func:`search_campaign`."""
+    return search_campaign([(layers, spec) for spec in specs], cfg,
+                           dedup=dedup)
+
+
+def _inert_mapping_rows(shape: Tuple[int, ...]
+                        ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                   np.ndarray]:
+    """Feasible placeholder mapping arrays for padded rows/models with any
+    leading ``shape``: unit tiles, identity order, the (K, C) pair, a 1x1
+    array.  One definition so every padded dispatch shares the same inert
+    convention."""
+    tiles = np.ones(shape + (NUM_DIMS,), np.int32)
+    orders = np.tile(np.arange(NUM_DIMS, dtype=np.int32), shape + (1,))
+    pairs = np.tile(np.asarray([0, 1], np.int32), shape + (1,))
+    shapes = np.ones(shape + (2,), np.int32)
+    return tiles, orders, pairs, shapes
+
+
+def evaluate_fixed_genome_many(
+        requests: Sequence[Tuple[Sequence[Layer], FlexSpec, np.ndarray]]
+        ) -> List[ModelResult]:
+    """Replay fixed mapping configs on many models in one chunked pass.
+
+    Each request is ``(layers, spec, genome)``; all specs must share an
+    HWConfig.  The (model, layer) rows of every request are flattened into
+    one row list and evaluated through ``evaluate_rows`` in ``ROW_BUCKET``
+    chunks, so the whole fig13 frozen-design replay — every future model —
+    reuses one compiled program and a handful of dispatches.  Rows are
+    independent, so per-request results are bit-identical to per-model
+    :func:`evaluate_fixed_genome` calls."""
+    reqs = [(list(layers), spec, np.asarray(genome))
+            for layers, spec, genome in requests]
+    assert reqs, "need at least one request"
+    hw = reqs[0][1].hw
+    assert all(spec.hw == hw for _, spec, _ in reqs), \
+        "replay requests must share an HWConfig"
+
+    row_data = []          # per-row decoded arrays
+    mappings = []
+    bounds: List[Tuple[int, int]] = []
+    for layers, spec, genome in reqs:
+        start = len(row_data)
+        for layer in layers:
+            space = mapspace_for(layer, spec)
+            g = space.clip(genome[None, :])
+            t, o, p, s = space.decode_batch(g)
+            row_data.append((space.dims, layer.stride, layer.depthwise,
+                             t[0], o[0], p[0], s[0], space.hard_partition))
+            mappings.append(space.decode(g[0]))
+        bounds.append((start, len(row_data)))
+
+    pieces = []
+    for c0 in range(0, len(row_data), ROW_BUCKET):
+        chunk = row_data[c0:c0 + ROW_BUCKET]
+        n_pad = ROW_BUCKET
+        dims = np.ones((n_pad, 6), np.int32)
+        stride = np.ones(n_pad, np.int32)
+        dw = np.zeros(n_pad, np.bool_)
+        tiles, orders, pairs, shapes = _inert_mapping_rows((n_pad,))
+        hp = np.zeros(n_pad, np.bool_)
+        for i, (d_, s_, w_, t, o, p, sh, h) in enumerate(chunk):
+            dims[i], stride[i], dw[i] = d_, s_, w_
+            tiles[i], orders[i], pairs[i], shapes[i], hp[i] = t, o, p, sh, h
+        res = evaluate_rows(dims, stride, dw, tiles, orders, pairs, shapes,
+                            hp, hw)
+        pieces.append(CostResult(*(np.asarray(f)[:len(chunk)] for f in res)))
+
+    out: List[ModelResult] = []
+    if pieces:
+        res = CostResult(*(np.concatenate([p[f] for p in pieces])
+                           for f in range(len(CostResult._fields))))
+    for (start, end), _req in zip(bounds, reqs):
+        per_layer = [MapperResult(
+            mapping=mappings[j],
+            runtime=float(res.runtime[j]), energy=float(res.energy[j]),
+            edp=float(res.edp[j]), util=float(res.util[j]),
+            dram_elems=float(res.dram_elems[j]),
+            feasible=bool(res.feasible[j]), history=[])
+            for j in range(start, end)]
+        out.append(_model_result(per_layer))
+    return out
+
+
 def evaluate_fixed_genome(layers: Sequence[Layer], spec: FlexSpec,
                           genome: np.ndarray) -> ModelResult:
     """Run ONE mapping config on every layer (what an InFlex accel does).
-    All layers evaluate in a single batched dispatch (padded to the engine's
-    row bucket so every model shares one compiled program)."""
-    n = len(layers)
-    n_pad = _bucket(max(n, 1), ROW_BUCKET)
-    dims = np.ones((n_pad, 6), np.int32)
-    stride = np.ones(n_pad, np.int32)
-    dw = np.zeros(n_pad, np.bool_)
-    tiles = np.ones((n_pad, 6), np.int32)
-    orders = np.tile(np.arange(NUM_DIMS, dtype=np.int32), (n_pad, 1))
-    pairs = np.tile(np.asarray([0, 1], np.int32), (n_pad, 1))
-    shapes = np.ones((n_pad, 2), np.int32)
-    hp = np.zeros(n_pad, np.bool_)
-    mappings = []
-    for i, layer in enumerate(layers):
-        space = mapspace_for(layer, spec)
-        g = space.clip(np.asarray(genome)[None, :])
-        t, o, p, s = space.decode_batch(g)
-        tiles[i], orders[i], pairs[i], shapes[i] = t[0], o[0], p[0], s[0]
-        dims[i] = space.dims
-        stride[i] = layer.stride
-        dw[i] = layer.depthwise
-        hp[i] = space.hard_partition
-        mappings.append(space.decode(g[0]))
-    res = evaluate_rows(dims, stride, dw, tiles, orders, pairs, shapes, hp,
-                        spec.hw)
-    res = CostResult(*(np.asarray(f) for f in res))
-    per_layer = [MapperResult(
-        mapping=mappings[i],
-        runtime=float(res.runtime[i]), energy=float(res.energy[i]),
-        edp=float(res.edp[i]), util=float(res.util[i]),
-        dram_elems=float(res.dram_elems[i]),
-        feasible=bool(res.feasible[i]), history=[]) for i in range(n)]
-    return _model_result(per_layer)
+    Layers evaluate in batched ``ROW_BUCKET``-padded dispatches so every
+    model shares one compiled program; single-request case of
+    :func:`evaluate_fixed_genome_many`."""
+    return evaluate_fixed_genome_many([(layers, spec, genome)])[0]
 
 
 def raw_tile_feasibility(tiles: jnp.ndarray,
@@ -366,10 +440,9 @@ def raw_tile_feasibility(tiles: jnp.ndarray,
     return (in_vol + w_vol + o_vol) <= buffer_elems
 
 
-@partial(jax.jit, static_argnames=("hw", "hard_partition", "objective"))
-def _fixed_config_objective(dims, strides, dws, mask, tiles, orders, pairs,
-                            shapes, hw, hard_partition: bool,
-                            objective: str):
+def _fixed_config_objective_impl(dims, strides, dws, mask, tiles, orders,
+                                 pairs, shapes, hw, hard_partition: bool,
+                                 objective: str):
     """Whole-model objective of one shared mapping population — layer sweep,
     buffer-feasibility penalty and reduction all inside one jit (the serial
     version round-tripped raw tiles through host numpy every generation)."""
@@ -392,16 +465,49 @@ def _fixed_config_objective(dims, strides, dws, mask, tiles, orders, pairs,
             "edp": runtime * energy}[objective]
 
 
-def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
-                        cfg: Optional[GAConfig] = None
-                        ) -> Tuple[np.ndarray, ModelResult]:
-    """DSE for an *inflexible* accelerator: find the single TOPS config that
-    minimizes whole-model runtime (paper Sec 7, InFlex-0000-X-Opt).
+@partial(jax.jit, static_argnames=("hw", "hard_partition", "objective"))
+def _fixed_configs_objective(dims, strides, dws, mask, tiles, orders, pairs,
+                             shapes, hw, hard_partition: bool,
+                             objective: str):
+    """Model-stacked fixed-config objective: every array gains a leading
+    model axis (one genome tensor per shape bucket), so a whole campaign of
+    InFlex-0000-X-Opt designs evaluates in ONE dispatch per generation.
+    vmap preserves the per-model arithmetic of
+    ``_fixed_config_objective_impl``, so each model's (P,) objective is
+    bit-identical to a per-model dispatch of that body (and results are
+    independent of how many models share the stack)."""
 
-    The genome is shared across layers; per-layer tile clipping applies.
-    Layers are padded to the engine row bucket so every model reuses one
-    compiled objective."""
-    cfg = cfg or GAConfig()
+    def one(d, s, w, m, t, o, p, sh):
+        return _fixed_config_objective_impl(d, s, w, m, t, o, p, sh, hw,
+                                            hard_partition, objective)
+
+    return jax.vmap(one)(dims, strides, dws, mask, tiles, orders, pairs,
+                         shapes)
+
+
+@dataclasses.dataclass
+class _FixedConfigState:
+    """Per-model host state of one fixed-config GA (campaign batching)."""
+
+    layers: List[Layer]
+    spec: FlexSpec
+    space: MapSpace
+    ops: _Operators
+    rng: np.random.Generator
+    dims: np.ndarray
+    strides: np.ndarray
+    dws: np.ndarray
+    mask: np.ndarray
+    pop: np.ndarray
+    best_obj: float = np.inf
+    best_g: Optional[np.ndarray] = None
+
+
+def _fixed_config_state(layers: Sequence[Layer], spec: FlexSpec,
+                        cfg: GAConfig) -> _FixedConfigState:
+    """Build one model's GA state exactly as the single-model search did:
+    same rng seeding order (state construction, then the population sample),
+    so the campaign path consumes identical random streams."""
     rng = np.random.default_rng(cfg.seed)
     # use the largest layer's space for sampling bounds
     dims_mat = layers_as_array(layers)
@@ -419,27 +525,93 @@ def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
     dws[:n] = [l.depthwise for l in layers]
     mask = np.zeros(n_pad, np.bool_)
     mask[:n] = True
-
     pop = space.sample(rng, cfg.population)
+    return _FixedConfigState(layers=list(layers), spec=spec, space=space,
+                             ops=ops, rng=rng, dims=dims, strides=strides,
+                             dws=dws, mask=mask, pop=pop)
+
+
+def search_fixed_configs(
+        requests: Sequence[Tuple[Sequence[Layer], FlexSpec]],
+        cfg: Optional[GAConfig] = None
+        ) -> List[Tuple[np.ndarray, ModelResult]]:
+    """Fixed-config DSE for many models at once (fig13's InFlex-0000-X-Opt
+    row as one campaign).
+
+    Models are grouped into shape buckets — same padded layer count, same
+    hard-partition flag — and each bucket's populations are stacked into one
+    (M, P, 9) genome tensor: each generation is ONE ``_fixed_configs_objective``
+    dispatch for the whole bucket instead of one per model.  Selection,
+    crossover and mutation stay host-side per model with each model's own
+    Generator (seeded ``cfg.seed``, the single-model convention), so every
+    model's genome trajectory — and therefore the returned design — is
+    bit-identical to its own :func:`search_fixed_config` call."""
+    cfg = cfg or GAConfig()
+    requests = [(list(layers), spec) for layers, spec in requests]
+    assert requests, "need at least one request"
+    hw = requests[0][1].hw
+    assert all(spec.hw == hw for _, spec in requests), \
+        "fixed-config campaign requests must share an HWConfig"
+    states = [_fixed_config_state(layers, spec, cfg)
+              for layers, spec in requests]
+
     n_elite = ga_ops.n_elite(cfg)
     n_children = cfg.population - n_elite
-    best_obj, best_g = np.inf, None
-    for _ in range(cfg.generations):
-        tiles, orders, pairs, shapes = space.decode_batch(pop)
-        obj = np.asarray(_fixed_config_objective(
-            dims, strides, dws, mask, jnp.asarray(tiles),
-            jnp.asarray(orders), jnp.asarray(pairs), jnp.asarray(shapes),
-            hw=spec.hw, hard_partition=space.hard_partition,
-            objective=cfg.objective))
-        order_idx = np.argsort(obj, kind="stable")
-        if obj[order_idx[0]] < best_obj:
-            best_obj = float(obj[order_idx[0]])
-            best_g = pop[order_idx[0]].copy()
-        elites = pop[order_idx[:n_elite]]
-        ranks = rng.choice(cfg.population, n_children,
-                           p=ga_ops.rank_probs(cfg.population))
-        children = ops.mutate(ops.crossover(pop[order_idx[ranks]]))
-        pop = np.concatenate([elites, children], axis=0)
+    groups: Dict[tuple, List[_FixedConfigState]] = {}
+    for st in states:
+        key = (st.dims.shape[0], st.space.hard_partition)
+        groups.setdefault(key, []).append(st)
 
-    assert best_g is not None
-    return best_g, evaluate_fixed_genome(layers, spec, best_g)
+    for (n_pad, hard), group in groups.items():
+        # the model axis is padded to a power of two so any campaign size
+        # (1 model .. the full fig13 sweep) reuses a few compiled shapes;
+        # pad slots hold inert feasible rows with an all-zero layer mask
+        m = len(group)
+        m_pad = _bucket(m, 1)
+        dims_b = np.ones((m_pad, n_pad, 6), np.int32)
+        strides_b = np.ones((m_pad, n_pad), np.int32)
+        dws_b = np.zeros((m_pad, n_pad), np.bool_)
+        mask_b = np.zeros((m_pad, n_pad), np.bool_)
+        dims_b[:m] = [s.dims for s in group]
+        strides_b[:m] = [s.strides for s in group]
+        dws_b[:m] = [s.dws for s in group]
+        mask_b[:m] = [s.mask for s in group]
+        tiles_b, orders_b, pairs_b, shapes_b = _inert_mapping_rows(
+            (m_pad, cfg.population))
+        for _ in range(cfg.generations):
+            for mi, s in enumerate(group):
+                (tiles_b[mi], orders_b[mi], pairs_b[mi],
+                 shapes_b[mi]) = s.space.decode_batch(s.pop)
+            obj_b = np.asarray(_fixed_configs_objective(
+                dims_b, strides_b, dws_b, mask_b,
+                jnp.asarray(tiles_b), jnp.asarray(orders_b),
+                jnp.asarray(pairs_b), jnp.asarray(shapes_b),
+                hw=hw, hard_partition=hard, objective=cfg.objective))
+            for s, obj in zip(group, obj_b):
+                order_idx = np.argsort(obj, kind="stable")
+                if obj[order_idx[0]] < s.best_obj:
+                    s.best_obj = float(obj[order_idx[0]])
+                    s.best_g = s.pop[order_idx[0]].copy()
+                elites = s.pop[order_idx[:n_elite]]
+                ranks = s.rng.choice(cfg.population, n_children,
+                                     p=ga_ops.rank_probs(cfg.population))
+                children = s.ops.mutate(s.ops.crossover(
+                    s.pop[order_idx[ranks]]))
+                s.pop = np.concatenate([elites, children], axis=0)
+
+    assert all(s.best_g is not None for s in states)
+    replays = evaluate_fixed_genome_many(
+        [(s.layers, s.spec, s.best_g) for s in states])
+    return [(s.best_g, r) for s, r in zip(states, replays)]
+
+
+def search_fixed_config(layers: Sequence[Layer], spec: FlexSpec,
+                        cfg: Optional[GAConfig] = None
+                        ) -> Tuple[np.ndarray, ModelResult]:
+    """DSE for an *inflexible* accelerator: find the single TOPS config that
+    minimizes whole-model runtime (paper Sec 7, InFlex-0000-X-Opt).
+
+    The genome is shared across layers; per-layer tile clipping applies.
+    Layers are padded to the engine row bucket so every model reuses one
+    compiled objective.  Single-model case of :func:`search_fixed_configs`."""
+    return search_fixed_configs([(layers, spec)], cfg)[0]
