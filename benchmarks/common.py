@@ -47,6 +47,31 @@ def ga_budget(scale: float = 1.0) -> GAConfig:
     return base
 
 
+def flexion_reports(pairs, mc_samples: int,
+                    timings: Optional[Dict[str, float]] = None,
+                    phase: str = "flexion"):
+    """Flexion reports for ``(spec, layer)`` pairs, in input order.
+
+    One batched ``flexion_campaign`` call in campaign mode, the per-pair
+    serial ``compute_flexion`` loop otherwise — bit-identical either way
+    (every row uses seed 0, the single-call default).  Starts cache-cold so
+    the recorded phase timing compares fairly across benchmark passes.
+    """
+    from repro.core import (clear_flexion_reference_cache, compute_flexion,
+                            flexion_campaign)
+    clear_flexion_reference_cache()
+    t0 = time.time()
+    if campaign_mode():
+        reports = flexion_campaign([(spec, layer, 0) for spec, layer in pairs],
+                                   mc_samples=mc_samples, seed=0)
+    else:
+        reports = [compute_flexion(spec, layer, mc_samples=mc_samples)
+                   for spec, layer in pairs]
+    if timings is not None:
+        timings[phase] = round(time.time() - t0, 6)
+    return reports
+
+
 def find_layer(model: str, dims) -> Layer:
     """Locate a layer by its exact (K,C,Y,X,R,S) tuple (the paper quotes
     layers by dims, e.g. MnasNet Layer-29 = (1,480,14,14,5,5))."""

@@ -1,0 +1,102 @@
+"""Flexion pass: the batched MC campaign vs the serial per-row loop.
+
+Times the same flexion row grid — the fig7 tile-isolation accelerators on
+the paper's quoted MnasNet layers, plus their workload-agnostic reports —
+three ways: the per-row loop with the reference cache cleared per call (the
+pre-cache cost structure, for the trajectory record), the per-row loop with
+the shared cache (today's serial path), and the batched campaign.  Asserts
+the serial and campaign paths are bit-identical and checks the paired-
+sampling invariants (every fraction in [0, 1], PartFlex H-F(T) ≤ 1).
+
+Derived metrics are deterministic (fixed seeds, engine-independent), so the
+pass rides the same golden-parity + anchor-diff gates as fig7/fig13; the
+serial-vs-campaign wall clock lands in the BENCH ``phases`` sidecar.  Both
+paths start cache-cold so the comparison includes the C_X reference draw.
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import (FULLFLEX, PARTFLEX, clear_flexion_reference_cache,
+                        compute_flexion, flexion_campaign, inflex_baseline,
+                        make_variant)
+
+from .common import MNASNET_LAYERS, Table, bench_mode, find_layer
+
+# paper-scale sampling only in full mode; fast keeps CI smoke quick
+MC_BY_MODE = {"fast": 20_000, "default": 50_000, "full": 200_000}
+
+ACCELS = (
+    ("InFlex1000", lambda: inflex_baseline()),
+    ("PartFlex1000", lambda: make_variant("1000", PARTFLEX)),
+    ("FullFlex1000", lambda: make_variant("1000", FULLFLEX)),
+    ("PartFlex1111", lambda: make_variant("1111", PARTFLEX)),
+    ("FullFlex1111", lambda: make_variant("1111", FULLFLEX)),
+)
+QUOTED = ("layer1", "layer16", "layer29")
+
+
+def _rows():
+    specs = [(name, mk()) for name, mk in ACCELS]
+    layers = ([(ln, find_layer("mnasnet", MNASNET_LAYERS[ln]))
+               for ln in QUOTED] + [("agnostic", None)])
+    return [(aname, spec, lname, layer)
+            for lname, layer in layers for aname, spec in specs]
+
+
+def run(print_fn=print):
+    mc = MC_BY_MODE[bench_mode()]
+    rows = _rows()
+    fx_rows = [(spec, layer, 0) for _, spec, _, layer in rows]
+
+    # the pre-cache cost structure for the trajectory record: clearing the
+    # reference cache per call makes every row re-sample C_X, which is what
+    # the serial loop did before the shared (hw, hard, n, seed) cache
+    t0 = time.time()
+    for _, spec, _, layer in rows:
+        clear_flexion_reference_cache()
+        compute_flexion(spec, layer, mc_samples=mc, seed=0)
+    t_uncached = time.time() - t0
+
+    clear_flexion_reference_cache()
+    t0 = time.time()
+    serial = [compute_flexion(spec, layer, mc_samples=mc, seed=0)
+              for _, spec, _, layer in rows]
+    t_serial = time.time() - t0
+
+    clear_flexion_reference_cache()
+    t0 = time.time()
+    batched = flexion_campaign(fx_rows, mc_samples=mc, seed=0)
+    t_batched = time.time() - t0
+
+    t = Table(f"Flexion — campaign vs serial ({len(rows)} rows, "
+              f"{mc} MC samples)",
+              ["accel", "layer", "H-F", "W-F", "H-F(T)", "W-F(T)"])
+    for (aname, _, lname, _), rep in zip(rows, batched):
+        t.add(aname, lname, rep.hf, rep.wf, rep.per_axis_hf["T"],
+              rep.per_axis_wf["T"])
+    t.show(print_fn)
+    print_fn(f"serial-uncached {t_uncached * 1e3:.1f}ms  serial "
+             f"{t_serial * 1e3:.1f}ms  campaign {t_batched * 1e3:.1f}ms  "
+             f"({t_uncached / max(t_batched, 1e-9):.2f}x / "
+             f"{t_serial / max(t_batched, 1e-9):.2f}x)")
+
+    by_name = {(aname, lname): rep
+               for (aname, _, lname, _), rep in zip(rows, batched)}
+    bounded = all(0.0 <= v <= 1.0 for rep in batched
+                  for v in (rep.hf, rep.wf, *rep.per_axis_hf.values(),
+                            *rep.per_axis_wf.values()))
+    return {
+        "campaign_matches_serial": batched == serial,
+        "all_in_unit_interval": bounded,
+        "partflex1000_hf_T": by_name[("PartFlex1000",
+                                      "agnostic")].per_axis_hf["T"],
+        "fullflex1111_hf": by_name[("FullFlex1111", "agnostic")].hf,
+        "_phases": {"flexion_serial_uncached": round(t_uncached, 6),
+                    "flexion_serial": round(t_serial, 6),
+                    "flexion_campaign": round(t_batched, 6)},
+        "_speedup_uncached_over_campaign": round(
+            t_uncached / max(t_batched, 1e-9), 2),
+        "_speedup_serial_over_campaign": round(
+            t_serial / max(t_batched, 1e-9), 2),
+    }

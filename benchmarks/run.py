@@ -11,8 +11,8 @@ of the whole table/figure reproduction; derived = its headline metric).
 
 Machine-readable perf trajectory:
 
-  python -m benchmarks.run fig7 fig13 --engines serial,batched --campaign \
-      --json BENCH_mapper.json
+  python -m benchmarks.run fig7 fig11 fig13 flexion \
+      --engines serial,batched --campaign --json BENCH_mapper.json
 
 runs every selected bench once per engine — ``--campaign`` adds a third
 pass through the cross-model campaign path (batched engine + chunk
@@ -33,7 +33,7 @@ import traceback
 
 from . import (bridge_validation, fig7_tile, fig8_buffer, fig9_order,
                fig10_parallelism, fig11_shape, fig12_arraysize,
-               fig13_futureproof, roofline, table3_area)
+               fig13_futureproof, flexion_bench, roofline, table3_area)
 from ._compare import derived_equal, public_derived
 from .common import bench_mode, campaign_mode
 
@@ -46,17 +46,19 @@ BENCHES = {
     "fig11": (fig11_shape, "fullflex_speedup"),
     "fig12": (fig12_arraysize, "speedup_256_to_1024"),
     "fig13": (fig13_futureproof, "fullflex1111_geomean_future"),
+    "flexion": (flexion_bench, "partflex1000_hf_T"),
     "roofline": (roofline, "cells_ok"),
     "bridge": (bridge_validation, "long_decode_speedup"),
 }
 
-BENCH_SCHEMA = "repro-bench-mapper/v2"
+BENCH_SCHEMA = "repro-bench-mapper/v3"
 
-# benches whose derived metrics are pure functions of the MSE engines (the
-# golden-parity gate only covers these; roofline/bridge read external
-# artifacts and table3 never touches the mapper)
+# benches whose derived metrics are pure functions of the MSE engines or the
+# (seed-deterministic) flexion estimators (the golden-parity gate only
+# covers these; roofline/bridge read external artifacts and table3 never
+# touches the mapper)
 PARITY_BENCHES = {"fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-                  "fig13"}
+                  "fig13", "flexion"}
 
 
 def _warm_engine(engine: str) -> None:
@@ -78,6 +80,16 @@ def _warm_engine(engine: str) -> None:
 
     cfg = ga_budget()
     tiny = Layer("warmup", (4, 4, 4, 4, 1, 1))
+    # the flexion estimators are engine-independent numpy; one draw at the
+    # mode's sample budget pays the first-touch (allocator, code paths)
+    # outside the timed region so the first pass's flexion phases aren't
+    # cold-start inflated
+    from repro.core import compute_flexion
+    from repro.core.flexion_batched import clear_flexion_reference_cache
+    from .flexion_bench import MC_BY_MODE
+    compute_flexion(make_variant("1111", PARTFLEX), tiny,
+                    mc_samples=MC_BY_MODE[bench_mode()])
+    clear_flexion_reference_cache()
     if engine in ("batched", "campaign"):
         warmup_engine(cfg)
     else:
@@ -242,8 +254,12 @@ def main(argv=None) -> int:
         for name in names:
             if name not in PARITY_BENCHES:
                 continue
-            da = public_derived(engine_results[base].get(name, {}))
-            db = public_derived(engine_results[engine].get(name, {}))
+            if (name not in engine_results[base]
+                    or name not in engine_results[engine]):
+                continue   # the pass crashed — already counted, not a
+                           # parity bug
+            da = public_derived(engine_results[base][name])
+            db = public_derived(engine_results[engine][name])
             if not derived_equal(da, db):
                 failed += 1
                 print(f"PARITY MISMATCH {name}: [{base}] {da} != "

@@ -7,9 +7,9 @@ flexibility-constrained GA — reproducing the paper's core loop:
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
-from repro.core import (FULLFLEX, GAConfig, PARTFLEX, area_of,
-                        compute_flexion, describe, get_model,
-                        inflex_baseline, make_variant, search)
+from repro.core import (FULLFLEX, GAConfig, PARTFLEX, area_of, describe,
+                        flexion_campaign, get_model, inflex_baseline,
+                        make_variant, search)
 
 # MnasNet "Layer 1": the stem conv (32, 3, 224, 224, 3, 3)
 layer = get_model("mnasnet")[0]
@@ -25,8 +25,10 @@ accelerators = [
 
 ga = GAConfig(population=64, generations=40)
 base_runtime = None
-for spec in accelerators:
-    flexion = compute_flexion(spec, layer, mc_samples=20_000)
+# all five flexion reports in one batched MC campaign (shared C_X reference)
+flexions = flexion_campaign([(spec, layer, 0) for spec in accelerators],
+                            mc_samples=20_000)
+for spec, flexion in zip(accelerators, flexions):
     result = search(layer, spec, ga)
     area = area_of(spec)
     base_runtime = base_runtime or result.runtime

@@ -10,6 +10,8 @@ from .dse import (DSEResult, design_fixed_accelerator, future_proofing_study,
                   geomean_speedup, open_axes, run_dse)
 from .engine import EngineRow, RowResult, run_batched_ga, warmup_engine
 from .flexion import FlexionReport, compute_flexion, model_flexion
+from .flexion_batched import (clear_flexion_reference_cache,
+                              flexion_campaign, model_flexion_campaign)
 from .mapper import (GAConfig, MapperResult, ModelResult,
                      evaluate_fixed_genome, evaluate_fixed_genome_many,
                      raw_tile_feasibility, search, search_campaign,
@@ -29,6 +31,8 @@ __all__ = [
     "design_fixed_accelerator", "future_proofing_study", "geomean_speedup",
     "open_axes", "run_dse", "EngineRow", "RowResult", "run_batched_ga",
     "warmup_engine", "FlexionReport", "compute_flexion", "model_flexion",
+    "clear_flexion_reference_cache", "flexion_campaign",
+    "model_flexion_campaign",
     "GAConfig", "MapperResult", "ModelResult", "evaluate_fixed_genome",
     "evaluate_fixed_genome_many", "raw_tile_feasibility", "search",
     "search_campaign", "search_fixed_config", "search_fixed_configs",

@@ -19,7 +19,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from . import area_model
-from .flexion import FlexionReport, model_flexion
+from .flexion import FlexionReport
+from .flexion_batched import flexion_campaign, model_flexion_campaign
 from .mapper import (GAConfig, ModelResult, evaluate_fixed_genome,
                      evaluate_fixed_genome_many, search_campaign,
                      search_fixed_config, search_fixed_configs,
@@ -58,7 +59,11 @@ def run_dse(layers: Sequence[Layer], candidates: Sequence[FlexSpec],
 
     With the batched engine, candidates sharing an HWConfig are searched in
     ONE jitted dispatch (rows = specs x unique layers); results are
-    bit-identical to per-spec ``search_model`` calls."""
+    bit-identical to per-spec ``search_model`` calls.  ``with_flexion``
+    likewise estimates every candidate's flexion through one
+    ``model_flexion_campaign`` batch (bit-identical to per-spec
+    ``model_flexion`` calls, with the C_X reference sampled once per
+    HWConfig)."""
     cfg = cfg or GAConfig()
     candidates = list(candidates)
     if (cfg.engine == "batched" and len(candidates) > 1
@@ -66,11 +71,14 @@ def run_dse(layers: Sequence[Layer], candidates: Sequence[FlexSpec],
         mres_list = search_specs_batched(layers, candidates, cfg)
     else:
         mres_list = [search_model(layers, spec, cfg) for spec in candidates]
+    if with_flexion:
+        flex_list = model_flexion_campaign(
+            [(spec, layers) for spec in candidates], flexion_samples)
+    else:
+        flex_list = [None] * len(candidates)
     out = []
-    for spec, mres in zip(candidates, mres_list):
+    for spec, mres, flexion in zip(candidates, mres_list, flex_list):
         ar = area_model.area_of(spec)
-        flexion = (model_flexion(spec, layers, flexion_samples)
-                   if with_flexion else None)
         out.append(DSEResult(
             spec_name=spec.name, class_str=spec.class_str(),
             runtime=mres.runtime, energy=mres.energy, edp=mres.edp,
@@ -148,7 +156,9 @@ def future_proofing_study(base_model: str = "alexnet",
                           cfg: Optional[GAConfig] = None,
                           include_partflex_1111: bool = True,
                           campaign: bool = False,
-                          timings: Optional[Dict[str, float]] = None
+                          timings: Optional[Dict[str, float]] = None,
+                          flexion: Optional[Dict[str, float]] = None,
+                          flexion_samples: int = 20_000
                           ) -> Dict[str, Dict[str, float]]:
     """Fig 13: rows = accelerator variants, cols = models, values = runtime
     normalized to InFlex-0000-<base>-Opt on that model.
@@ -163,8 +173,15 @@ def future_proofing_study(base_model: str = "alexnet",
     batching and wall clock change.
 
     ``timings`` (optional dict) accumulates per-phase wall-clock seconds
-    under ``design_fixed`` / ``replay_frozen`` / ``flex_sweep`` — the BENCH
-    artifact's phase breakdown."""
+    under ``design_fixed`` / ``replay_frozen`` / ``flex_sweep`` (and
+    ``flexion`` when requested) — the BENCH artifact's phase breakdown.
+
+    ``flexion`` (optional dict) adds the H-F column: it is filled with
+    ``{row_name: hf}`` for every table row, estimated through one
+    ``flexion_campaign`` batch over all accelerator variants (the
+    ``InFlex0000-X-Opt`` family shares the frozen design's value — H-F is
+    workload-agnostic, so every InFlex-0000 spec on the same HW resources
+    scores identically)."""
     cfg = cfg or GAConfig()
     t_acc: Dict[str, float] = timings if timings is not None else {}
 
@@ -225,6 +242,15 @@ def future_proofing_study(base_model: str = "alexnet",
     flex_specs = [open_axes(frozen, cs, FULLFLEX) for cs in class_strs]
     if include_partflex_1111:
         flex_specs.append(open_axes(frozen, "1111", PARTFLEX))
+
+    if flexion is not None:
+        t0 = time.time()
+        fx_specs = [frozen, *flex_specs]
+        reports = flexion_campaign([(s, None, 0) for s in fx_specs],
+                                   mc_samples=flexion_samples, seed=0)
+        flexion.update({s.name: r.hf for s, r in zip(fx_specs, reports)})
+        flexion["InFlex0000-X-Opt"] = flexion[frozen.name]
+        tick("flexion", t0)
     for spec in flex_specs:
         table[spec.name] = {}
     t0 = time.time()

@@ -11,16 +11,23 @@ Per-axis fractions multiply (the axes are a cross product).  O/P/S axes are
 counted exactly from their tables; the T axis intersects a product space with
 buffer-capacity constraints, so we estimate it with Monte-Carlo sampling
 (confidence reported by the standard binomial error).
+
+The estimators here are thin single-row wrappers over the batched campaign
+in ``flexion_batched.py``: the hard and soft buffer predicates are evaluated
+on *paired* samples (one shared draw), which keeps the PartFlex H-F ratio
+inside [0, 1] by construction, and the workload-agnostic C_X fractions come
+from a memoized reference cache keyed by ``(hw, hard, n, seed)`` — so a
+model's H-F no longer drifts with its layer count.  ``flexion_campaign`` /
+``model_flexion_campaign`` batch many (spec, layer) estimates into one
+vectorized evaluation with bit-identical results.
 """
 from __future__ import annotations
 
 import dataclasses
 from typing import Dict, Optional
 
-import numpy as np
-
-from .spec import FlexSpec, HWConfig, INFLEX, PARTFLEX
-from .workloads import Layer, NUM_DIMS, R, S, X, Y, C, K
+from .spec import FlexSpec
+from .workloads import Layer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -37,105 +44,34 @@ class FlexionReport:
         return (f"H-F={self.hf:.4g} ({ax_h}) | W-F={self.wf:.4g} ({ax_w})")
 
 
-def _tile_volumes(t: np.ndarray, stride: int, depthwise: bool):
-    in_y = (t[:, Y] - 1) * stride + t[:, R]
-    in_x = (t[:, X] - 1) * stride + t[:, S]
-    vol_in = t[:, C] * in_y * in_x
-    vol_w = (1 if depthwise else t[:, K]) * t[:, C] * t[:, R] * t[:, S]
-    vol_out = (t[:, C] if depthwise else t[:, K]) * t[:, Y] * t[:, X]
-    return vol_in, vol_w, vol_out
-
-
-def _tile_fit_fraction(dims: np.ndarray, stride: int, depthwise: bool,
-                       hw: HWConfig, hard: bool,
-                       rng: np.random.Generator, n: int) -> float:
-    """P(uniform tile over prod[1, d_i] satisfies the buffer constraint)."""
-    t = np.stack([rng.integers(1, dims[d] + 1, n) for d in range(NUM_DIMS)],
-                 axis=1).astype(np.float64)
-    vi, vw, vo = _tile_volumes(t, stride, depthwise)
-    buf = float(hw.buffer_elems)
-    if hard:
-        ok = (vi <= buf / 3) & (vw <= buf / 3) & (vo <= buf / 3)
-    else:
-        ok = (vi + vw + vo) <= buf
-    return float(np.mean(ok))
-
-
-def _tile_fit_fraction_agnostic(hw: HWConfig, hard: bool,
-                                rng: np.random.Generator, n: int,
-                                dmax: int = 256) -> float:
-    """Workload-agnostic version for H-F: tiles sampled from [1, dmax]^6
-    (C_X is workload-agnostic per paper Sec 4.1)."""
-    dims = np.full(NUM_DIMS, dmax, np.int64)
-    dims[R] = dims[S] = 11  # filters are small in practice
-    return _tile_fit_fraction(dims, 1, False, hw, hard, rng, n)
-
-
 def compute_flexion(spec: FlexSpec, layer: Optional[Layer] = None,
                     mc_samples: int = 200_000, seed: int = 0,
-                    reference: Optional[FlexSpec] = None) -> FlexionReport:
-    """Flexion of ``spec``.  ``reference`` defines C_X (defaults to the
-    FullFlex accelerator with the same HW resources)."""
-    rng = np.random.default_rng(seed)
-    ref = reference or FlexSpec(hw=spec.hw)
+                    reference: Optional[FlexSpec] = None,
+                    ref_seed: Optional[int] = None) -> FlexionReport:
+    """Flexion of ``spec``.  ``reference`` defines C_X for the exact O/P/S
+    axes (defaults to the FullFlex accelerator with the same HW resources).
 
-    hf: Dict[str, float] = {}
-    wf: Dict[str, float] = {}
-
-    # ---- O axis: exact ------------------------------------------------------
-    n_ord = len(spec.order.order_table())
-    hf["O"] = n_ord / len(ref.order.order_table())
-    wf["O"] = n_ord / 720.0
-
-    # ---- P axis: exact ------------------------------------------------------
-    n_par = len(spec.parallel.pair_table())
-    hf["P"] = n_par / len(ref.parallel.pair_table())
-    wf["P"] = n_par / 30.0
-
-    # ---- S axis: exact ------------------------------------------------------
-    n_shape = len(spec.shape.shape_table(spec.hw.num_pes))
-    n_shape_ref = len(ref.shape.shape_table(ref.hw.num_pes))
-    hf["S"] = n_shape / n_shape_ref
-    wf["S"] = n_shape / n_shape_ref  # workload does not constrain S
-
-    # ---- T axis: Monte-Carlo -------------------------------------------------
-    if spec.tile.flex == INFLEX:
-        # A supports exactly 1 tile point.
-        p_soft = _tile_fit_fraction_agnostic(spec.hw, False, rng, mc_samples)
-        hf["T"] = 1.0 / max(p_soft * 256.0 ** 4 * 11 ** 2, 1.0)
-        if layer is not None:
-            wf["T"] = 1.0 / float(np.prod(np.asarray(layer.dims, np.float64)))
-        else:
-            wf["T"] = hf["T"]
-    else:
-        hard = spec.tile.flex == PARTFLEX
-        p_ref = _tile_fit_fraction_agnostic(spec.hw, False, rng, mc_samples)
-        p_acc = (_tile_fit_fraction_agnostic(spec.hw, True, rng, mc_samples)
-                 if hard else p_ref)
-        hf["T"] = p_acc / max(p_ref, 1e-12)
-        if layer is not None:
-            dims = np.asarray(layer.dims, np.int64)
-            wf["T"] = _tile_fit_fraction(dims, layer.stride, layer.depthwise,
-                                         spec.hw, hard, rng, mc_samples)
-        else:
-            wf["T"] = hf["T"]
-
-    return FlexionReport(
-        per_axis_hf=hf, per_axis_wf=wf,
-        hf=float(np.prod(list(hf.values()))),
-        wf=float(np.prod(list(wf.values()))),
-        mc_samples=mc_samples,
-    )
+    ``seed`` drives the workload (W-F) sample stream; ``ref_seed`` (default:
+    ``seed``) selects the memoized workload-agnostic C_X reference stream —
+    ``model_flexion`` pins it to the base seed so every layer of a model
+    reports the same H-F.  Single-row case of ``flexion_campaign``, with
+    bit-identical results.
+    """
+    # imported here: flexion_batched imports FlexionReport from this module
+    from .flexion_batched import flexion_campaign
+    return flexion_campaign([(spec, layer, seed)], mc_samples=mc_samples,
+                            seed=seed if ref_seed is None else ref_seed,
+                            reference=reference)[0]
 
 
 def model_flexion(spec: FlexSpec, layers, mc_samples: int = 50_000,
                   seed: int = 0) -> FlexionReport:
     """Average W-F across a model's layers (paper's Venn diagrams plot the
-    per-model average); H-F is workload-agnostic so taken once."""
-    reports = [compute_flexion(spec, l, mc_samples, seed + i)
-               for i, l in enumerate(layers)]
-    hf = reports[0].hf
-    wf = float(np.mean([r.wf for r in reports]))
-    return FlexionReport(per_axis_hf=reports[0].per_axis_hf,
-                         per_axis_wf={"avg": wf}, hf=hf, wf=wf,
-                         mc_samples=mc_samples)
+    per-model average); H-F is workload-agnostic and computed once from the
+    shared reference cache.  Single-request case of
+    ``model_flexion_campaign``, with bit-identical results."""
+    if not layers:
+        raise ValueError("model has no layers")
+    from .flexion_batched import model_flexion_campaign
+    return model_flexion_campaign([(spec, list(layers))], mc_samples,
+                                  seed)[0]

@@ -1,0 +1,152 @@
+"""Batched↔serial flexion parity and the paired-sampling regression tests.
+
+``flexion_campaign`` promises bit-identical results to per-row
+``compute_flexion`` (same host draw streams, same float64 predicate means),
+and the paired hard/soft evaluation promises the PartFlex H-F(T) ratio never
+leaves [0, 1] — the bound the old independent-stream estimator violated by
+orders of magnitude on small buffers.
+"""
+import itertools
+
+import numpy as np
+import pytest
+
+from repro.core import (FULLFLEX, PARTFLEX, HWConfig,
+                        clear_flexion_reference_cache, compute_flexion,
+                        flexion_campaign, get_model, make_variant,
+                        model_flexion, model_flexion_campaign)
+from repro.core.workloads import C, K, NUM_DIMS, R, S, X, Y
+
+# parity grid: tile axis at all three flex levels, mixed other axes
+SPECS = [
+    make_variant("0000"),                  # INFLEX tile axis
+    make_variant("1000", PARTFLEX),
+    make_variant("1000", FULLFLEX),
+    make_variant("0110", FULLFLEX),        # tile INFLEX, O/P open
+    make_variant("1111", PARTFLEX),
+    make_variant("1111", FULLFLEX),
+]
+
+# MODEL_ZOO layers: plain conv, stride-4 conv, depthwise stride-2, depthwise
+# stride-1, GEMM, matrix-vector — plus the workload-agnostic row
+LAYERS = [
+    get_model("mnasnet")[0],        # stem conv, stride 1
+    get_model("alexnet")[0],        # conv1, stride 4
+    get_model("mnasnet")[1],        # sep.dw, depthwise, stride 2
+    get_model("mobilenetv2")[1],    # ir0.0.dw, depthwise, stride 1
+    get_model("bert")[0],           # qkv_proj GEMM
+    get_model("dlrm")[0],           # bot0 matrix-vector
+    None,                           # workload-agnostic report
+]
+MC = 3000
+
+
+def _report_values(rep):
+    return (rep.hf, rep.wf, *rep.per_axis_hf.values(),
+            *rep.per_axis_wf.values())
+
+
+def test_campaign_bit_identical_to_per_row():
+    """Row i of the campaign == compute_flexion with the campaign's seed
+    convention (workload seed + i, shared reference seed)."""
+    rows = [(spec, layer) for spec in SPECS for layer in LAYERS]
+    clear_flexion_reference_cache()
+    camp = flexion_campaign(rows, mc_samples=MC, seed=7)
+    clear_flexion_reference_cache()
+    for i, (spec, layer) in enumerate(rows):
+        ref = compute_flexion(spec, layer, mc_samples=MC, seed=7 + i,
+                              ref_seed=7)
+        assert camp[i] == ref, (i, spec.name,
+                                layer.name if layer else None)
+
+
+def test_campaign_explicit_seeds_match_default_wrapper():
+    """(spec, layer, 0) triples with seed=0 reproduce plain
+    compute_flexion(spec, layer) — the benchmark convention."""
+    rows = [(spec, layer, 0) for spec in SPECS[:4] for layer in LAYERS[:3]]
+    camp = flexion_campaign(rows, mc_samples=MC, seed=0)
+    for (spec, layer, _), rep in zip(rows, camp):
+        assert rep == compute_flexion(spec, layer, mc_samples=MC, seed=0)
+
+
+def test_model_campaign_matches_model_flexion():
+    requests = [(make_variant("1111", PARTFLEX), get_model("ncf")),
+                (make_variant("1000", FULLFLEX), get_model("dlrm")),
+                (make_variant("0000"), get_model("ncf"))]
+    camp = model_flexion_campaign(requests, mc_samples=2000, seed=3)
+    for (spec, layers), rep in zip(requests, camp):
+        assert rep == model_flexion(spec, layers, mc_samples=2000, seed=3)
+
+
+def test_model_campaign_empty_model_raises():
+    with pytest.raises(ValueError, match="no layers"):
+        model_flexion_campaign([(make_variant("1111"), [])])
+
+
+def test_all_values_in_unit_interval_192_combo_domain():
+    """Every flexion fraction lies in [0, 1] across the full 192-combo
+    domain: 16 classes x {PartFlex, FullFlex} x 3 layer kinds x 2 HWConfigs
+    (the paper baseline and a 2KB buffer that stresses the paired bound)."""
+    class_strs = ["".join(b) for b in itertools.product("01", repeat=4)]
+    layers = [LAYERS[0], LAYERS[2], LAYERS[1]]   # conv, depthwise, stride>1
+    rows = [(make_variant(cs, level, hw=hw), layer, 0)
+            for hw in (HWConfig(), HWConfig(buffer_bytes=2048))
+            for cs in class_strs
+            for level in (PARTFLEX, FULLFLEX)
+            for layer in layers]
+    assert len(rows) == 192
+    reports = flexion_campaign(rows, mc_samples=2000, seed=0)
+    for (spec, layer, _), rep in zip(rows, reports):
+        for v in _report_values(rep):
+            assert 0.0 <= v <= 1.0, (spec.name, layer.name, v)
+
+
+# --------------------------------------------------------------------------
+# Regression: the old independent-stream PartFlex H-F estimator
+# --------------------------------------------------------------------------
+
+def _old_tile_fit_fraction(hw, hard, rng, n):
+    """The pre-fix estimator, verbatim: each call draws its OWN samples from
+    the shared rng, so the hard and soft fractions came from independent
+    streams."""
+    dims = np.full(NUM_DIMS, 256, np.int64)
+    dims[R] = dims[S] = 11
+    t = np.stack([rng.integers(1, dims[d] + 1, n) for d in range(NUM_DIMS)],
+                 axis=1).astype(np.float64)
+    in_y = (t[:, Y] - 1) + t[:, R]
+    in_x = (t[:, X] - 1) + t[:, S]
+    vi = t[:, C] * in_y * in_x
+    vw = t[:, K] * t[:, C] * t[:, R] * t[:, S]
+    vo = t[:, K] * t[:, Y] * t[:, X]
+    buf = float(hw.buffer_elems)
+    if hard:
+        ok = (vi <= buf / 3) & (vw <= buf / 3) & (vo <= buf / 3)
+    else:
+        ok = (vi + vw + vo) <= buf
+    return float(np.mean(ok))
+
+
+def test_old_independent_streams_violated_hf_bound():
+    """With a 128-byte buffer, 2000 samples and seed 177 the old estimator
+    reported H-F(T) = p_acc / p_ref >> 1 (the soft draw saw zero hits, the
+    independent hard draw saw one) — the paired estimator cannot."""
+    hw = HWConfig(buffer_bytes=128)
+    n, seed = 2000, 177
+    rng = np.random.default_rng(seed)
+    p_ref = _old_tile_fit_fraction(hw, False, rng, n)
+    p_acc = _old_tile_fit_fraction(hw, True, rng, n)
+    old_hf_t = p_acc / max(p_ref, 1e-12)
+    assert old_hf_t > 1.0          # the bug, reproduced
+
+    spec = make_variant("1000", PARTFLEX, hw=hw)
+    rep = compute_flexion(spec, mc_samples=n, seed=seed)
+    assert rep.per_axis_hf["T"] <= 1.0
+
+
+def test_paired_hf_bound_holds_for_all_seeds():
+    """p_hard <= p_soft per shared sample set => the ratio is bounded for
+    every seed, even at tiny sample counts on a tiny buffer."""
+    spec = make_variant("1000", PARTFLEX, hw=HWConfig(buffer_bytes=128))
+    for seed in range(25):
+        rep = compute_flexion(spec, mc_samples=500, seed=seed)
+        assert 0.0 <= rep.per_axis_hf["T"] <= 1.0

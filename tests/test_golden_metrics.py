@@ -1,8 +1,9 @@
 """Golden-metrics regression harness (ISSUE 3).
 
 The committed ``BENCH_mapper.json`` pins the fast-mode fig7/fig13 derived
-paper metrics.  These tests re-run both figure reproductions through every
-MSE path — serial, batched, and the cross-model campaign — and assert
+paper metrics plus the flexion pass's estimator invariants.  These tests
+re-run the benches through every MSE path — serial, batched, and the
+cross-model campaign — and assert
 
   * the three paths agree with each other *bit-identically* (the engines'
     golden-parity contract; same process, same machine, no excuses), and
@@ -29,10 +30,14 @@ if str(REPO) not in sys.path:          # benchmarks/ lives at the repo root
 # the derived values each bench must reproduce (the golden metrics)
 GOLDEN_KEYS = {
     "fig7": ("fullflex1000_speedup", "partflex1000_speedup", "ordering_ok"),
-    "fig13": ("fullflex1111_geomean_future", "beats_inflex_everywhere"),
+    "fig13": ("fullflex1111_geomean_future", "beats_inflex_everywhere",
+              "fullflex1111_hf"),
+    "flexion": ("campaign_matches_serial", "all_in_unit_interval",
+                "partflex1000_hf_T", "fullflex1111_hf"),
 }
 BENCH_MODULES = {"fig7": "benchmarks.fig7_tile",
-                 "fig13": "benchmarks.fig13_futureproof"}
+                 "fig13": "benchmarks.fig13_futureproof",
+                 "flexion": "benchmarks.flexion_bench"}
 PATHS = ("serial", "batched", "campaign")
 ANCHOR_RTOL = 1e-6
 
