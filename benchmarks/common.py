@@ -32,14 +32,26 @@ def ga_budget(scale: float = 1.0) -> GAConfig:
     """The GA budget for the current REPRO_BENCH_MODE; REPRO_ENGINE
     (batched | serial) overrides the MSE engine, which is how
     ``benchmarks.run --engines`` A/B-times the two engines.  Campaign mode
-    forces the batched engine and turns on chunk pipelining (host draw prep
-    overlapped with device compute)."""
+    requires the batched engine and turns on chunk pipelining (host draw
+    prep overlapped with device compute).
+
+    ``REPRO_ENGINE=serial`` together with ``REPRO_CAMPAIGN=1`` is a
+    contradiction — the campaign path is batched-only, and silently forcing
+    ``engine="batched"`` (the old behavior) let an A/B run record a pass
+    labeled *serial* that actually measured the batched engine.  It now
+    raises instead of mislabeling."""
     import dataclasses
     base = BUDGETS[bench_mode()]
     engine = os.environ.get("REPRO_ENGINE")
     if engine:
         base = dataclasses.replace(base, engine=engine)
     if campaign_mode():
+        if engine and engine != "batched":
+            raise RuntimeError(
+                f"REPRO_ENGINE={engine!r} conflicts with REPRO_CAMPAIGN=1: "
+                f"the campaign path is batched-only, and honoring the "
+                f"campaign flag would mislabel this pass; unset one of the "
+                f"two variables")
         base = dataclasses.replace(base, engine="batched", pipeline=True)
     if scale != 1.0:
         base = dataclasses.replace(

@@ -8,17 +8,24 @@ of the whole table/figure reproduction; derived = its headline metric).
   REPRO_BENCH_MODE=fast|default|full                      # GA budgets
   REPRO_ENGINE=batched|serial                             # MSE engine
   REPRO_CAMPAIGN=1                                        # campaign batching
+  REPRO_DEVICES=N|all|i,j                                 # device pool
 
 Machine-readable perf trajectory:
 
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   python -m benchmarks.run fig7 fig11 fig13 flexion \
-      --engines serial,batched --campaign --json BENCH_mapper.json
+      --engines serial,batched --campaign --devices 4 \
+      --json BENCH_mapper.json
 
-runs every selected bench once per engine — ``--campaign`` adds a third
-pass through the cross-model campaign path (batched engine + chunk
-pipelining + whole-sweep row sets, with per-phase timings) — and writes a
-BENCH JSON artifact (per-bench ``us_per_call`` + derived metrics + phases +
-speedups) so future PRs can diff mapper performance instead of guessing.
+runs every selected bench once per engine — ``--campaign`` adds a pass
+through the cross-model campaign path (batched engine + chunk pipelining +
+whole-sweep row sets, with per-phase timings), and ``--devices N`` adds a
+``campaign-dN`` pass with the campaign's chunks round-robin sharded over a
+device pool of N (simulated host devices on CPU via the ``XLA_FLAGS`` line
+above; real accelerators otherwise) — and writes a BENCH JSON artifact
+(per-bench ``us_per_call`` + derived metrics + phases + speedups + a
+``device_scaling`` block) so future PRs can diff mapper performance
+instead of guessing.
 
 All passes must agree on every derived metric (the engines' golden-parity
 contract); any mismatch makes the run exit nonzero so CI gates on it.
@@ -51,7 +58,7 @@ BENCHES = {
     "bridge": (bridge_validation, "long_decode_speedup"),
 }
 
-BENCH_SCHEMA = "repro-bench-mapper/v3"
+BENCH_SCHEMA = "repro-bench-mapper/v4"
 
 # benches whose derived metrics are pure functions of the MSE engines or the
 # (seed-deterministic) flexion estimators (the golden-parity gate only
@@ -69,16 +76,21 @@ def _warm_engine(engine: str) -> None:
     Warms every jit family a bench can hit: the engine program (or the
     serial evaluate_population, in both hard-partition variants) plus the
     engine-independent fixed-config objective and fixed-genome evaluator, so
-    neither engine pass times compiles the other pass already paid for."""
+    neither engine pass times compiles the other pass already paid for.
+    Device-pool passes (``campaign-dN``) warm each pool device: the engine
+    program via ``warmup_engine`` and the replay evaluator via a pool-sized
+    ``evaluate_fixed_genome`` call."""
     import dataclasses
 
-    from repro.core import (Layer, PARTFLEX, make_variant, search,
-                            search_fixed_config, search_fixed_configs)
-    from repro.core.engine import warmup_engine
+    from repro.core import (Layer, PARTFLEX, evaluate_fixed_genome,
+                            make_variant, search, search_fixed_config,
+                            search_fixed_configs)
+    from repro.core.engine import ROW_BUCKET, warmup_engine
 
     from .common import ga_budget
 
     cfg = ga_budget()
+    is_campaign = engine.startswith("campaign")
     tiny = Layer("warmup", (4, 4, 4, 4, 1, 1))
     # the flexion estimators are engine-independent numpy; one draw at the
     # mode's sample budget pays the first-touch (allocator, code paths)
@@ -90,22 +102,29 @@ def _warm_engine(engine: str) -> None:
     compute_flexion(make_variant("1111", PARTFLEX), tiny,
                     mc_samples=MC_BY_MODE[bench_mode()])
     clear_flexion_reference_cache()
-    if engine in ("batched", "campaign"):
-        warmup_engine(cfg)
+    if engine == "batched" or is_campaign:
+        warmup_engine(cfg)    # dispatches to every pool device
     else:
         scfg = dataclasses.replace(cfg, engine="serial", generations=2)
         search(tiny, make_variant("1111"), scfg)
         search(tiny, make_variant("1111", PARTFLEX), scfg)
     # shared jits (fixed-config objective + batched fixed-genome eval)
     wcfg = dataclasses.replace(cfg, generations=2)
-    search_fixed_config([tiny], make_variant("1111"), wcfg)
-    if engine == "campaign":
+    genome, _ = search_fixed_config([tiny], make_variant("1111"), wcfg)
+    if is_campaign:
         # the model-stacked fixed-config program at the campaign's padded
         # model-axis shape: fig13 designs its whole model set in one call,
         # so warm with the same request count (same power-of-two bucket)
         from .fig13_futureproof import MODELS
         search_fixed_configs([([tiny], make_variant("1111"))] * len(MODELS),
                              wcfg)
+        from repro.core.device_pool import default_pool
+        pool = default_pool()
+        if pool is not None and len(pool) > 1:
+            # replay chunks round-robin over the pool: one ROW_BUCKET chunk
+            # per device warms each device's evaluate_rows executable
+            evaluate_fixed_genome([tiny] * (ROW_BUCKET * len(pool)),
+                                  make_variant("1111"), genome)
 
 
 def _run_once(names):
@@ -140,9 +159,11 @@ def _speedup_row(rows_a, rows_b):
     return speedup
 
 
-def _bench_json(engine_rows, engine_results):
-    """BENCH artifact: per-pass per-bench us_per_call + derived metrics (+
-    campaign phase timings), plus pairwise speedups between passes."""
+def _bench_json(engine_rows, engine_results, devices=None):
+    """BENCH artifact (schema v4): per-pass per-bench us_per_call + derived
+    metrics (+ campaign phase timings), pairwise speedups between passes,
+    and — when a ``--devices`` pass ran — a ``device_scaling`` block
+    recording the pool size and the campaign → sharded-campaign speedup."""
     doc = {
         "schema": BENCH_SCHEMA,
         "bench_mode": bench_mode(),
@@ -167,6 +188,26 @@ def _bench_json(engine_rows, engine_results):
                       ("serial", "campaign", "speedup_serial_over_campaign")):
         if {a, b} <= set(engine_rows):
             doc[key] = _speedup_row(engine_rows[a], engine_rows[b])
+    if devices:
+        label = f"campaign-d{devices}"
+        try:
+            import jax
+            available = len(jax.local_devices())
+        except Exception:  # noqa: BLE001
+            available = None
+        try:
+            requested = int(devices)
+        except ValueError:
+            requested = devices          # "all" / explicit index list
+        scaling = {"pass": label, "devices_requested": requested,
+                   "devices_available": available}
+        if {label, "campaign"} <= set(engine_rows):
+            scaling["speedup_campaign_over_devices"] = _speedup_row(
+                engine_rows["campaign"], engine_rows[label])
+        if {label, "serial"} <= set(engine_rows):
+            scaling["speedup_serial_over_devices"] = _speedup_row(
+                engine_rows["serial"], engine_rows[label])
+        doc["device_scaling"] = scaling
     return doc
 
 
@@ -193,16 +234,28 @@ def main(argv=None) -> int:
     json_path = None
     engines = None
     campaign = False
+    devices = None
     rest = []
     it = iter(argv)
     for a in it:
-        if a in ("--json", "--engines"):
+        if a in ("--json", "--engines", "--devices"):
             value = next(it, None)
             if value is None:
                 print(f"error: {a} expects a value", file=sys.stderr)
                 return 2
             if a == "--json":
                 json_path = value
+            elif a == "--devices":
+                # same grammar as REPRO_DEVICES: count | "all" | i,j indices
+                from repro.dist.pool import parse_device_spec
+                try:
+                    if parse_device_spec(value) is None:
+                        raise ValueError("empty device spec")
+                except ValueError as e:
+                    print(f"error: --devices {value!r}: {e}",
+                          file=sys.stderr)
+                    return 2
+                devices = value.strip()
             else:
                 engines = [e.strip() for e in value.split(",") if e.strip()]
         elif a == "--campaign":
@@ -212,24 +265,38 @@ def main(argv=None) -> int:
     names = [a for a in rest if a in BENCHES] or list(BENCHES)
     if engines is None:
         # a plain `REPRO_CAMPAIGN=1 python -m benchmarks.run` IS a campaign
-        # run (the per-pass env setup below would otherwise clear the flag)
-        engines = (["campaign"] if campaign_mode()
-                   else [os.environ.get("REPRO_ENGINE", "batched")])
+        # run (the per-pass env setup below would otherwise clear the flag),
+        # and REPRO_DEVICES makes it a sharded one
+        if campaign_mode():
+            dev_env = os.environ.get("REPRO_DEVICES")
+            engines = [f"campaign-d{dev_env}" if dev_env else "campaign"]
+            if dev_env and devices is None:
+                devices = dev_env.strip()   # device_scaling block rides along
+        else:
+            engines = [os.environ.get("REPRO_ENGINE", "batched")]
     if campaign and "campaign" not in engines:
         engines.append("campaign")
+    if devices is not None and f"campaign-d{devices}" not in engines:
+        engines.append(f"campaign-d{devices}")
 
     engine_rows = {}
     engine_results = {}
     failed = 0
     prev_engine = os.environ.get("REPRO_ENGINE")
     prev_campaign = os.environ.get("REPRO_CAMPAIGN")
+    prev_devices = os.environ.get("REPRO_DEVICES")
     for engine in engines:
-        if engine == "campaign":
+        if engine.startswith("campaign"):
             os.environ["REPRO_ENGINE"] = "batched"
             os.environ["REPRO_CAMPAIGN"] = "1"
+            if "-d" in engine:    # campaign-dN: shard chunks over N devices
+                os.environ["REPRO_DEVICES"] = engine.split("-d", 1)[1]
+            else:
+                os.environ.pop("REPRO_DEVICES", None)
         else:
             os.environ["REPRO_ENGINE"] = engine
             os.environ.pop("REPRO_CAMPAIGN", None)
+            os.environ.pop("REPRO_DEVICES", None)
         try:
             _warm_engine(engine)
         except Exception:  # noqa: BLE001 - warmup is best-effort
@@ -239,7 +306,8 @@ def main(argv=None) -> int:
         engine_results[engine] = results
         failed += nfail
     for var, prev in (("REPRO_ENGINE", prev_engine),
-                      ("REPRO_CAMPAIGN", prev_campaign)):
+                      ("REPRO_CAMPAIGN", prev_campaign),
+                      ("REPRO_DEVICES", prev_devices)):
         if prev is None:
             os.environ.pop(var, None)
         else:
@@ -270,7 +338,8 @@ def main(argv=None) -> int:
         json.dump(engine_results[engines[-1]], f, indent=2, default=str)
     if json_path:
         with open(json_path, "w") as f:
-            json.dump(_bench_json(engine_rows, engine_results), f, indent=2,
+            json.dump(_bench_json(engine_rows, engine_results,
+                                  devices=devices), f, indent=2,
                       default=str)
         print(f"\nwrote {json_path}")
 

@@ -1,0 +1,39 @@
+"""Glue between the mapper/campaign layers and the ``repro.dist`` device
+pool.
+
+One resolution order everywhere a campaign chunk can be placed:
+
+  1. an explicit ``GAConfig(devices=...)`` on the config in hand,
+  2. the ``REPRO_DEVICES`` environment variable (count, ``"all"``, or
+     comma-separated local-device indices — see
+     ``repro.dist.pool.parse_device_spec``),
+  3. neither → ``None``: callers skip ``device_put`` entirely and jax's
+     default placement applies, so the default path is byte-for-byte the
+     pre-pool behavior (no extra transfers, no committed arrays).
+
+Chunks are independent, so placement never changes results — the sharded
+and single-device campaigns are bit-identical (tests/test_device_pool.py).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+from repro.dist.pool import DevicePool
+
+
+def pool_for(cfg=None) -> Optional[DevicePool]:
+    """The device pool requested by ``cfg.devices`` or ``REPRO_DEVICES``;
+    ``None`` when neither asks for one (keep default placement)."""
+    spec = getattr(cfg, "devices", None) if cfg is not None else None
+    if spec is None:
+        spec = os.environ.get("REPRO_DEVICES") or None
+    if spec is None:
+        return None
+    return DevicePool.from_spec(spec)
+
+
+def default_pool() -> Optional[DevicePool]:
+    """The env-driven pool (``REPRO_DEVICES``) for call sites with no
+    ``GAConfig`` in reach (fixed-genome replay, the jax flexion backend)."""
+    return pool_for(None)

@@ -66,6 +66,8 @@ def run_dse(layers: Sequence[Layer], candidates: Sequence[FlexSpec],
     HWConfig)."""
     cfg = cfg or GAConfig()
     candidates = list(candidates)
+    if not candidates:
+        return []      # an empty candidate set is a valid (empty) DSE
     if (cfg.engine == "batched" and len(candidates) > 1
             and all(s.hw == candidates[0].hw for s in candidates)):
         mres_list = search_specs_batched(layers, candidates, cfg)

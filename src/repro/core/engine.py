@@ -43,7 +43,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ga_ops
+from repro.dist.pool import InFlightQueue
+
+from . import device_pool, ga_ops
 from .cost_model import CostResult, evaluate_mapping_impl
 from .ga_ops import GENOME_LEN, GenDraws
 from .mapspace import mapspace_for, padded_tables
@@ -191,40 +193,90 @@ class ChunkInputs(NamedTuple):
 
 
 def run_batched_ga(rows: Sequence[EngineRow], cfg) -> List[RowResult]:
-    """Search all rows batched; returns per-row results in order.  All rows
+    """Search all rows batched; returns per-row results in order (``[]`` for
+    an empty row set — an empty campaign is a valid campaign).  All rows
     must share an HWConfig (one static ``hw`` per program).
 
     Row sets larger than ``ROW_BUCKET`` run in bucket-sized chunks so that
     *every* call — any model, any number of specs — reuses the same compiled
     program instead of forcing a bigger-shape recompile.
 
-    With ``cfg.pipeline`` the chunk loop is software-pipelined: chunk ``i``
-    is dispatched (JAX dispatch is asynchronous) and while the device crunches
-    it, the host assembles chunk ``i+1``'s draw streams — the host-side hot
-    path of a campaign-sized row set — before blocking on chunk ``i``'s
-    results.  Scheduling only; per-chunk inputs and outputs are unchanged, so
-    results stay bit-identical to the unpipelined loop."""
-    assert rows, "need at least one row"
+    Chunks are independent, so they can run anywhere: with a device pool
+    (``cfg.devices`` or ``REPRO_DEVICES``, see ``repro.core.device_pool``)
+    chunk ``i`` is ``device_put`` onto pool device ``i % D`` and the same
+    compiled program executes there.  Placement is the ONLY change, so
+    sharded results are bit-identical to the single-device run.  Without
+    ``cfg.pipeline`` the chunk loop stays synchronous — placement then just
+    pins chunks (e.g. steering work off a busy default device); devices
+    only crunch *concurrently* when the pipeline keeps chunks in flight.
+
+    With ``cfg.pipeline`` the chunk loop is software-pipelined through an
+    :class:`~repro.dist.pool.InFlightQueue`: chunk ``i`` is dispatched (JAX
+    dispatch is asynchronous) and while the device crunches it, the host
+    assembles the next chunks' draw streams — the host-side hot path of a
+    campaign-sized row set — keeping up to one chunk in flight *per pool
+    device* before blocking on the oldest.  Scheduling only; per-chunk
+    inputs and outputs are unchanged, so results stay bit-identical to the
+    unpipelined loop.  If preparing or dispatching a later chunk raises, the
+    already-dispatched in-flight chunks are still collected (never abandoned
+    mid-device) and the error is re-raised with the failing chunk's context.
+    """
+    if not rows:
+        return []
     hw = rows[0].spec.hw
     assert all(r.spec.hw == hw for r in rows), \
         "batched rows must share an HWConfig"
+    pool = device_pool.pool_for(cfg)
     chunks = [rows[start:start + ROW_BUCKET]
               for start in range(0, len(rows), ROW_BUCKET)]
     out: List[RowResult] = []
     if getattr(cfg, "pipeline", False):
-        in_flight = None           # (n_rows, gens, device outputs)
-        for chunk in chunks:
-            inputs = _prepare_chunk(chunk, cfg, hw)
-            outputs = _dispatch_chunk(inputs, cfg, hw)
-            if in_flight is not None:
-                out.extend(_collect_chunk(*in_flight))
-            in_flight = (len(chunk), inputs.gens, outputs)
-        out.extend(_collect_chunk(*in_flight))
+        n_chunks = len(chunks)
+
+        def collect_with_context(idx, n_rows, gens, outputs):
+            try:
+                return _collect_chunk(n_rows, gens, outputs)
+            except Exception as e:
+                raise RuntimeError(
+                    f"engine chunk {idx}/{n_chunks} failed during "
+                    f"collection") from e
+
+        queue = InFlightQueue(depth=len(pool) if pool else 1,
+                              collect=collect_with_context)
+        try:
+            for idx, chunk in enumerate(chunks):
+                try:
+                    inputs = _prepare_chunk(chunk, cfg, hw)
+                    outputs = _dispatch_chunk(
+                        inputs, cfg, hw,
+                        device=pool.device_for(idx) if pool else None)
+                except Exception as e:
+                    raise RuntimeError(
+                        f"engine chunk {idx}/{n_chunks} (rows "
+                        f"{idx * ROW_BUCKET}.."
+                        f"{idx * ROW_BUCKET + len(chunk) - 1}"
+                        f") failed during prepare/dispatch") from e
+                out.extend(queue.push(idx, len(chunk), inputs.gens, outputs))
+            out.extend(queue.drain())
+        except Exception:
+            # never abandon dispatched device work: block on every
+            # remaining in-flight chunk (each drain attempt consumes at
+            # least one entry, so this terminates) before propagating the
+            # chunk-contextualized error
+            while len(queue):
+                try:
+                    queue.drain()
+                except Exception:  # noqa: BLE001 - original error wins
+                    pass
+            raise
     else:
-        for chunk in chunks:
+        for idx, chunk in enumerate(chunks):
             inputs = _prepare_chunk(chunk, cfg, hw)
-            out.extend(_collect_chunk(len(chunk), inputs.gens,
-                                      _dispatch_chunk(inputs, cfg, hw)))
+            out.extend(_collect_chunk(
+                len(chunk), inputs.gens,
+                _dispatch_chunk(inputs, cfg, hw,
+                                device=pool.device_for(idx) if pool
+                                else None)))
     return out
 
 
@@ -289,13 +341,20 @@ def _prepare_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
                        pop0=pop0, draws=draw_stack, gens=gens)
 
 
-def _dispatch_chunk(c: ChunkInputs, cfg, hw: HWConfig):
+def _dispatch_chunk(c: ChunkInputs, cfg, hw: HWConfig, device=None):
     """Launch the chunk's GA program; returns device arrays without blocking
-    (JAX async dispatch), so the caller can overlap further host work."""
+    (JAX async dispatch), so the caller can overlap further host work.
+
+    With ``device`` the chunk's arrays are committed there first, so the
+    program executes on that device (jit follows committed inputs); the
+    program and inputs are otherwise identical, hence identical outputs."""
+    args = (c.dims, c.stride, c.depthwise, c.tile_lo, c.tile_hi,
+            c.hard_partition, c.table_id, c.orders, c.pairs, c.shapes,
+            c.lens, c.pop0, c.draws)
+    if device is not None:
+        args = jax.device_put(args, device)
     return _ga_program(
-        c.dims, c.stride, c.depthwise, c.tile_lo, c.tile_hi,
-        c.hard_partition, c.table_id, c.orders, c.pairs, c.shapes, c.lens,
-        c.pop0, c.draws, np.int32(c.gens),
+        *args, np.int32(c.gens),
         hw=hw, n_elite=ga_ops.n_elite(cfg), objective=cfg.objective)
 
 
@@ -326,9 +385,16 @@ def _collect_chunk(n_rows: int, gens: int, outputs) -> List[RowResult]:
 
 def warmup_engine(cfg, hw: Optional[HWConfig] = None) -> None:
     """Trigger the (one-time) engine compile for a GA budget outside any
-    timed region — e.g. before a benchmark loop."""
+    timed region — e.g. before a benchmark loop.  With a device pool
+    (``cfg.devices`` / ``REPRO_DEVICES``) the warmup chunk is dispatched to
+    EVERY pool device, so per-device executables are ready before the timed
+    chunks round-robin over them."""
     from .spec import make_variant
     hw = hw or HWConfig()
     row = EngineRow(Layer("warmup", (4, 4, 4, 4, 1, 1)),
                     make_variant("1111", hw=hw), seed=0)
-    run_batched_ga([row], cfg)
+    pool = device_pool.pool_for(cfg)
+    inputs = _prepare_chunk([row], cfg, hw)
+    for dev in (pool.devices if pool else (None,)):
+        _collect_chunk(1, inputs.gens,
+                       _dispatch_chunk(inputs, cfg, hw, device=dev))

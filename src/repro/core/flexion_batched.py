@@ -164,12 +164,18 @@ def _jax_eval():
 
 
 def _eval_jobs(t: np.ndarray, draw_idx: np.ndarray, stride: np.ndarray,
-               depthwise: np.ndarray, buf: np.ndarray
-               ) -> Tuple[np.ndarray, np.ndarray]:
+               depthwise: np.ndarray, buf: np.ndarray, chunk: int = 0,
+               pool=None) -> Tuple[np.ndarray, np.ndarray]:
     """Evaluate each job's predicates over its draw slice of the stacked
-    (D, 6, N) sample tensor (``draw_idx`` maps jobs to draws)."""
+    (D, 6, N) sample tensor (``draw_idx`` maps jobs to draws).  ``chunk``
+    indexes the caller's chunk loop: on the jax backend, with a ``pool``
+    (resolved once by the caller from ``REPRO_DEVICES``) chunk *i*'s batch
+    is committed to pool device ``i % D`` — same program, same inputs, so
+    per-job fractions are placement-independent.  The jax path returns
+    *device* arrays without blocking (async dispatch); the caller
+    materializes them, so later chunks' host draws overlap device compute
+    and pool devices run concurrently."""
     if _backend() == "jax":
-        import jax.numpy as jnp
         tj = t[draw_idx]                      # gather: one (J, 6, N) batch
         j = tj.shape[0]
         jp = _JOB_BUCKET
@@ -182,12 +188,12 @@ def _eval_jobs(t: np.ndarray, draw_idx: np.ndarray, stride: np.ndarray,
             depthwise = np.concatenate([depthwise,
                                         np.zeros(jp - j, depthwise.dtype)])
             buf = np.concatenate([buf, np.ones(jp - j, buf.dtype)])
-        soft, hard = _jax_eval()(jnp.asarray(tj, jnp.float32),
-                                 jnp.asarray(stride, jnp.float32),
-                                 jnp.asarray(depthwise),
-                                 jnp.asarray(buf, jnp.float32))
-        return (np.asarray(soft, np.float64)[:j],
-                np.asarray(hard, np.float64)[:j])
+        args = (np.asarray(tj, np.float32), np.asarray(stride, np.float32),
+                np.asarray(depthwise), np.asarray(buf, np.float32))
+        if pool is not None:
+            args = pool.place(args, chunk)
+        soft, hard = _jax_eval()(*args)
+        return soft[:j], hard[:j]       # still on device — caller blocks
     # numpy path: one vectorized evaluation per job over its (no-copy) draw
     # view — the (N,) working set stays L2-resident, which measures ~8x
     # faster per sample than fusing the whole stacked tensor through each
@@ -250,12 +256,37 @@ class _Jobs:
     def evaluate(self) -> Tuple[np.ndarray, np.ndarray]:
         """Draw every sample stream once (host numpy) and evaluate both
         predicates of every job in chunked vectorized dispatches; returns
-        (p_soft, p_hard) per evaluation job."""
+        (p_soft, p_hard) per evaluation job.
+
+        Chunks flow through an in-flight queue (depth = pool size, 1
+        without a pool): on the jax backend the next chunk's host draws
+        overlap the dispatched chunk's device compute, and with a
+        ``REPRO_DEVICES`` pool up to one chunk per device crunches
+        concurrently.  Materialization order and values are unchanged —
+        boolean means are per-row, so results are placement- and
+        scheduling-independent."""
+        from repro.dist.pool import InFlightQueue
+
+        from .device_pool import default_pool
+
         j = len(self.draw_id)
         p_soft = np.zeros(j, np.float64)
         p_hard = np.zeros(j, np.float64)
+
+        def _store(sel, soft, hard):
+            p_soft[sel] = np.asarray(soft, np.float64)
+            p_hard[sel] = np.asarray(hard, np.float64)
+            return ()
+
+        # only the jax backend dispatches asynchronously; the numpy path is
+        # synchronous, so resolving a pool there would just init jax and
+        # buffer stores for nothing
+        pool = default_pool() if _backend() == "jax" else None
+        queue = InFlightQueue(depth=len(pool) if pool else 1,
+                              collect=_store)
         draws_per_chunk = max(1, _CHUNK_SAMPLES // max(self.n, 1))
-        for dstart in range(0, len(self.draw_dims), draws_per_chunk):
+        for ci, dstart in enumerate(range(0, len(self.draw_dims),
+                                         draws_per_chunk)):
             dstop = min(dstart + draws_per_chunk, len(self.draw_dims))
             t = np.empty((dstop - dstart, NUM_DIMS, self.n), np.float64)
             for d in range(dstart, dstop):
@@ -269,9 +300,10 @@ class _Jobs:
                 np.asarray([self.draw_id[i] - dstart for i in sel], np.int64),
                 np.asarray([self.stride[i] for i in sel], np.float64),
                 np.asarray([self.depthwise[i] for i in sel]),
-                np.asarray([self.buf[i] for i in sel], np.float64))
-            p_soft[sel] = soft
-            p_hard[sel] = hard
+                np.asarray([self.buf[i] for i in sel], np.float64),
+                chunk=ci, pool=pool)
+            queue.push(sel, soft, hard)
+        queue.drain()
         return p_soft, p_hard
 
 

@@ -33,7 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from . import ga_ops
+from repro.dist.pool import InFlightQueue, parse_device_spec
+
+from . import device_pool, ga_ops
 from .cost_model import (CostResult, evaluate_mapping_impl,
                          evaluate_population, evaluate_rows)
 from .engine import ROW_BUCKET, EngineRow, _bucket, run_batched_ga
@@ -42,6 +44,28 @@ from .spec import FlexSpec
 from .workloads import Layer, NUM_DIMS, layers_as_array
 
 ENGINES = ("batched", "serial")
+
+
+def _normalize_devices(devices):
+    """Canonicalize ``GAConfig.devices`` to a hashable form (int count,
+    index tuple, or stripped string) and *validate it at construction*
+    through the one grammar in ``repro.dist.pool.parse_device_spec`` — a
+    bad spec fails here with a clear ValueError instead of deep inside a
+    chunk dispatch, and GAConfig can never accept a spec the env var / CLI
+    forms would reject."""
+    if isinstance(devices, np.integer):
+        devices = int(devices)
+    if isinstance(devices, str):
+        devices = devices.strip()
+        if not devices:
+            return None
+    elif not isinstance(devices, int):      # bools flow through to parse
+        try:
+            devices = tuple(int(i) for i in devices)
+        except TypeError as e:
+            raise ValueError(f"invalid devices spec {devices!r}") from e
+    parse_device_spec(devices)              # raises ValueError on garbage
+    return devices
 
 
 @dataclasses.dataclass(frozen=True)
@@ -58,11 +82,44 @@ class GAConfig:
     pipeline: bool = False      # overlap host draw prep with device compute
                                 # across engine chunks (scheduling only —
                                 # results are bit-identical either way)
+    devices: Optional[object] = None
+                                # device pool for engine/replay chunks: a
+                                # count, "all", or tuple of local-device
+                                # indices (None -> REPRO_DEVICES env ->
+                                # default placement); placement only, so
+                                # results are bit-identical either way
 
     def __post_init__(self):
         if self.engine not in ENGINES:
             raise ValueError(f"unknown engine {self.engine!r}; "
                              f"expected one of {ENGINES}")
+        # Degenerate GA shapes used to slip through and make the engines
+        # disagree (generations=0: the serial loop dies on its best-genome
+        # assert while the batched engine returns an inf-objective garbage
+        # row; elite_frac >= 1 or population < 2 leave no children to
+        # breed).  Reject them HERE so both engines fail identically, at
+        # construction, with an actionable message.
+        if self.population < 2:
+            raise ValueError(
+                f"population must be >= 2 (elites plus at least one child), "
+                f"got {self.population}")
+        if self.generations < 1:
+            raise ValueError(
+                f"generations must be >= 1, got {self.generations}")
+        if not 0.0 <= self.elite_frac < 1.0:
+            raise ValueError(
+                f"elite_frac must be in [0, 1) so n_children >= 1, "
+                f"got {self.elite_frac}")
+        for field in ("mutation_rate", "crossover_rate"):
+            v = getattr(self, field)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(
+                    f"{field} must be in [0, 1], got {v}")
+        if self.objective not in ("runtime", "energy", "edp"):
+            raise ValueError(f"unknown objective {self.objective!r}")
+        if self.devices is not None:
+            object.__setattr__(self, "devices",
+                               _normalize_devices(self.devices))
 
 
 @dataclasses.dataclass
@@ -292,7 +349,10 @@ def search_campaign(requests: Sequence[Tuple[Sequence[Layer], FlexSpec]],
     compute.  Per-request results are bit-identical to per-request
     ``search_model_batched`` calls: rows keep the same per-layer dedup and
     seed convention (``cfg.seed + 1000 * first_occurrence_index``), and rows
-    are independent, so packing them differently changes nothing."""
+    are independent, so packing them differently changes nothing — which is
+    also why a device pool (``cfg.devices`` / ``REPRO_DEVICES``) can spread
+    the chunks without changing any result.  An empty campaign returns
+    ``[]`` (it used to trip the engine's row assert)."""
     cfg = cfg or GAConfig()
     requests = [(list(layers), spec) for layers, spec in requests]
     all_rows: List[EngineRow] = []
@@ -362,12 +422,17 @@ def evaluate_fixed_genome_many(
     HWConfig.  The (model, layer) rows of every request are flattened into
     one row list and evaluated through ``evaluate_rows`` in ``ROW_BUCKET``
     chunks, so the whole fig13 frozen-design replay — every future model —
-    reuses one compiled program and a handful of dispatches.  Rows are
-    independent, so per-request results are bit-identical to per-model
-    :func:`evaluate_fixed_genome` calls."""
+    reuses one compiled program and a handful of dispatches.  With a device
+    pool (``REPRO_DEVICES``) chunk *i* is committed to pool device ``i % D``
+    and up to one chunk per device stays in flight (bounded backpressure —
+    device memory never grows with the replay size), so the replay spreads
+    over the pool.  Rows are independent, so per-request results are
+    bit-identical to per-model :func:`evaluate_fixed_genome` calls —
+    sharded or not."""
     reqs = [(list(layers), spec, np.asarray(genome))
             for layers, spec, genome in requests]
-    assert reqs, "need at least one request"
+    if not reqs:
+        return []
     hw = reqs[0][1].hw
     assert all(spec.hw == hw for _, spec, _ in reqs), \
         "replay requests must share an HWConfig"
@@ -386,8 +451,19 @@ def evaluate_fixed_genome_many(
             mappings.append(space.decode(g[0]))
         bounds.append((start, len(row_data)))
 
-    pieces = []
-    for c0 in range(0, len(row_data), ROW_BUCKET):
+    pool = device_pool.default_pool()
+    pieces: List[CostResult] = []
+
+    def _materialize(n, res):
+        pieces.append(CostResult(*(np.asarray(f)[:n] for f in res)))
+        return ()
+
+    # one in-flight chunk per pool device (1 without a pool) — async
+    # round-robin dispatch with bounded backpressure, so device memory
+    # stays at ~pool-depth chunks however large the replay is
+    queue = InFlightQueue(depth=len(pool) if pool else 1,
+                          collect=_materialize)
+    for ci, c0 in enumerate(range(0, len(row_data), ROW_BUCKET)):
         chunk = row_data[c0:c0 + ROW_BUCKET]
         n_pad = ROW_BUCKET
         dims = np.ones((n_pad, 6), np.int32)
@@ -398,9 +474,11 @@ def evaluate_fixed_genome_many(
         for i, (d_, s_, w_, t, o, p, sh, h) in enumerate(chunk):
             dims[i], stride[i], dw[i] = d_, s_, w_
             tiles[i], orders[i], pairs[i], shapes[i], hp[i] = t, o, p, sh, h
-        res = evaluate_rows(dims, stride, dw, tiles, orders, pairs, shapes,
-                            hp, hw)
-        pieces.append(CostResult(*(np.asarray(f)[:len(chunk)] for f in res)))
+        args = (dims, stride, dw, tiles, orders, pairs, shapes, hp)
+        if pool is not None:
+            args = pool.place(args, ci)
+        queue.push(len(chunk), evaluate_rows(*args, hw))
+    queue.drain()
 
     out: List[ModelResult] = []
     if pieces:

@@ -1,9 +1,13 @@
-"""Logical-axis sharding: rule tables bind model annotations to mesh axes."""
+"""Logical-axis sharding: rule tables bind model annotations to mesh axes.
+Plus the device pool (``pool``): round-robin placement of independent
+campaign chunks over ``jax.local_devices()``."""
 from .api import (axis_rules, constrain, current_rules, logical_to_spec,
                   validate_spec)
+from .pool import DevicePool, InFlightQueue, parse_device_spec
 from .sharding import (DEFAULT_RULES, batch_spec, cache_shardings, make_rules,
                        param_shardings)
 
 __all__ = ["axis_rules", "constrain", "current_rules", "logical_to_spec",
            "validate_spec", "DEFAULT_RULES", "batch_spec", "cache_shardings",
-           "make_rules", "param_shardings"]
+           "make_rules", "param_shardings", "DevicePool", "InFlightQueue",
+           "parse_device_spec"]

@@ -1,0 +1,150 @@
+"""Campaign edge-case regression tests (ISSUE 5 satellites).
+
+Each test here pins a bug that existed before this change:
+
+  * empty campaigns crashed on the engine's row assert instead of
+    returning ``[]``;
+  * degenerate ``GAConfig``s (``generations=0``, ``elite_frac >= 1``, tiny
+    populations) were accepted and then made the serial and batched engines
+    *disagree* (assert-crash vs inf-objective garbage row);
+  * an exception while preparing/dispatching chunk i+1 in the pipelined
+    engine loop silently abandoned the already-dispatched in-flight chunk;
+  * ``benchmarks.common.ga_budget()`` silently forced ``engine="batched"``
+    when ``REPRO_ENGINE=serial`` and ``REPRO_CAMPAIGN=1`` were both set, so
+    an A/B run could record a mislabeled "serial" pass.
+"""
+import dataclasses
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.core import (GAConfig, get_model, inflex_baseline, make_variant,
+                        run_batched_ga, run_dse, search_campaign,
+                        search_specs_batched)
+from repro.core import engine as engine_mod
+from repro.core.engine import EngineRow, ROW_BUCKET
+
+REPO = Path(__file__).resolve().parents[1]
+if str(REPO) not in sys.path:          # benchmarks/ lives at the repo root
+    sys.path.insert(0, str(REPO))
+
+LAYERS = get_model("ncf")
+CFG = GAConfig(population=6, generations=2, seed=5)
+
+
+# --------------------------------------------------------------------------
+# empty campaigns return empty results
+# --------------------------------------------------------------------------
+
+def test_empty_campaigns_return_empty():
+    assert run_batched_ga([], CFG) == []
+    assert search_campaign([], CFG) == []
+    assert search_specs_batched(LAYERS, [], CFG) == []
+    assert run_dse(LAYERS, [], CFG) == []
+    assert run_dse(LAYERS, [], CFG, with_flexion=True) == []
+
+
+def test_empty_request_inside_campaign_is_fine():
+    """A request with no layers yields an empty (zero-cost) ModelResult,
+    not a crash."""
+    out = search_campaign([([], inflex_baseline()),
+                           (LAYERS, inflex_baseline())], CFG)
+    assert len(out) == 2
+    assert out[0].per_layer == [] and out[0].runtime == 0.0
+    assert out[1].per_layer and out[1].runtime > 0.0
+
+
+# --------------------------------------------------------------------------
+# degenerate GAConfigs are rejected identically for both engines
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("engine", ["serial", "batched"])
+@pytest.mark.parametrize("bad", [
+    dict(generations=0), dict(generations=-3),
+    dict(population=1), dict(population=0),
+    dict(elite_frac=1.0), dict(elite_frac=1.5), dict(elite_frac=-0.1),
+    dict(mutation_rate=1.0001), dict(mutation_rate=-0.5),
+    dict(crossover_rate=2.0), dict(crossover_rate=-1.0),
+])
+def test_degenerate_gaconfigs_rejected_for_both_engines(engine, bad):
+    """Construction (and dataclasses.replace, which re-runs __post_init__)
+    must raise for BOTH engines — the old behavior let ``generations=0``
+    through and the engines then returned different garbage."""
+    with pytest.raises(ValueError):
+        GAConfig(engine=engine, **bad)
+    with pytest.raises(ValueError):
+        dataclasses.replace(GAConfig(engine=engine), **bad)
+
+
+def test_boundary_gaconfigs_accepted():
+    # the smallest legal GA: 1 elite + 1 child, one generation
+    GAConfig(population=2, generations=1, elite_frac=0.0,
+             mutation_rate=0.0, crossover_rate=1.0)
+    GAConfig(elite_frac=0.99, mutation_rate=1.0, crossover_rate=0.0)
+
+
+# --------------------------------------------------------------------------
+# pipelined engine loop: a poisoned chunk must not abandon in-flight work
+# --------------------------------------------------------------------------
+
+def test_pipeline_poisoned_chunk_collects_in_flight_and_names_chunk(
+        monkeypatch):
+    """Rows 0..63 form a good chunk; row 64 poisons chunk 1's preparation
+    (a negative seed makes ``np.random.default_rng`` raise).  The pipelined
+    loop must first collect the already-dispatched chunk 0 (never leave
+    device work orphaned) and then surface the error with the failing
+    chunk's context."""
+    spec = make_variant("1111")
+    good = [EngineRow(layer, spec, seed=1000 * i)
+            for i, layer in enumerate(
+                (get_model("mnasnet") + get_model("resnet50"))[:ROW_BUCKET])]
+    poisoned = good + [EngineRow(LAYERS[0], spec, seed=-1)]
+
+    collected = []
+    real_collect = engine_mod._collect_chunk
+
+    def counting_collect(n_rows, gens, outputs):
+        out = real_collect(n_rows, gens, outputs)
+        collected.append(n_rows)
+        return out
+
+    monkeypatch.setattr(engine_mod, "_collect_chunk", counting_collect)
+    cfg = dataclasses.replace(CFG, population=4, pipeline=True)
+    with pytest.raises(RuntimeError, match=r"chunk 1/2") as exc:
+        run_batched_ga(poisoned, cfg)
+    assert isinstance(exc.value.__cause__, ValueError)   # the real poison
+    assert collected == [ROW_BUCKET], \
+        "the dispatched in-flight chunk was not collected before re-raise"
+
+    # sanity: the same rows minus the poison complete normally
+    collected.clear()
+    assert len(run_batched_ga(good, cfg)) == ROW_BUCKET
+    assert collected == [ROW_BUCKET]
+
+
+# --------------------------------------------------------------------------
+# ga_budget: REPRO_ENGINE=serial + REPRO_CAMPAIGN=1 is a contradiction
+# --------------------------------------------------------------------------
+
+def test_ga_budget_rejects_engine_campaign_conflict(monkeypatch):
+    from benchmarks.common import ga_budget
+
+    monkeypatch.setenv("REPRO_ENGINE", "serial")
+    monkeypatch.setenv("REPRO_CAMPAIGN", "1")
+    with pytest.raises(RuntimeError, match="REPRO_CAMPAIGN"):
+        ga_budget()
+
+    # the non-conflicting combinations keep working, correctly labeled
+    monkeypatch.setenv("REPRO_ENGINE", "batched")
+    cfg = ga_budget()
+    assert cfg.engine == "batched" and cfg.pipeline
+
+    monkeypatch.delenv("REPRO_ENGINE")
+    cfg = ga_budget()
+    assert cfg.engine == "batched" and cfg.pipeline
+
+    monkeypatch.setenv("REPRO_ENGINE", "serial")
+    monkeypatch.delenv("REPRO_CAMPAIGN")
+    cfg = ga_budget()
+    assert cfg.engine == "serial" and not cfg.pipeline

@@ -1,0 +1,230 @@
+"""Device-pool tests (ISSUE 5 tentpole).
+
+Unit level: the ``repro.dist.pool`` spec grammar, round-robin chunk→device
+assignment, in-flight queue ordering/depth, and the ``GAConfig(devices=...)``
+/ ``REPRO_DEVICES`` resolution order.
+
+Engine level: chunk→device dispatch recording, and — in a subprocess with
+``--xla_force_host_platform_device_count=4`` (jax locks the device count at
+first init) — the golden-parity contract: a 4-device sharded campaign over
+the fig7/fig13-style row sets is bit-identical to the single-device run, for
+the GA engine, the fixed-genome replay, and the jax flexion backend.
+"""
+import dataclasses
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+from repro.core import (GAConfig, PARTFLEX, get_model, make_variant,
+                        search_campaign)
+from repro.core import engine as engine_mod
+from repro.core.device_pool import default_pool, pool_for
+from repro.dist.pool import DevicePool, InFlightQueue, parse_device_spec
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+
+
+def run_subprocess(code: str, devices: int = 4, timeout=600) -> str:
+    prog = (f"import os\n"
+            f"os.environ['XLA_FLAGS']="
+            f"'--xla_force_host_platform_device_count={devices}'\n"
+            + textwrap.dedent(code))
+    env = dict(os.environ, PYTHONPATH=SRC)
+    out = subprocess.run([sys.executable, "-c", prog], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    assert out.returncode == 0, out.stderr[-3000:]
+    return out.stdout
+
+
+# --------------------------------------------------------------------------
+# spec grammar + resolution order
+# --------------------------------------------------------------------------
+
+def test_parse_device_spec_grammar():
+    assert parse_device_spec(None) is None
+    assert parse_device_spec("") is None
+    assert parse_device_spec(3) == (0, 1, 2)
+    assert parse_device_spec("2") == (0, 1)
+    assert parse_device_spec("all") == ()
+    assert parse_device_spec("0,2") == (0, 2)
+    assert parse_device_spec((1, 0, 1)) == (1, 0, 1)   # duplicates kept
+    for bad in (0, -1, "0,-2", (), True):
+        with pytest.raises(ValueError):
+            parse_device_spec(bad)
+
+
+def test_pool_from_spec_clamps_counts_and_checks_indices():
+    import jax
+    n = len(jax.local_devices())
+    # count form clamps to availability (REPRO_DEVICES=64 is safe anywhere)
+    pool = DevicePool.from_spec(n + 63)
+    assert len(pool) == n
+    assert DevicePool.from_spec(None) is None
+    assert len(DevicePool.from_spec("all")) == n
+    # explicit out-of-range index is the caller's error
+    with pytest.raises(ValueError):
+        DevicePool.from_spec((0, n + 5))
+
+
+def test_round_robin_assignment():
+    pool = DevicePool(["a", "b", "c"])
+    assert [pool.device_for(i) for i in range(7)] == \
+        ["a", "b", "c", "a", "b", "c", "a"]
+
+
+def test_pool_resolution_order(monkeypatch):
+    monkeypatch.delenv("REPRO_DEVICES", raising=False)
+    assert pool_for(GAConfig()) is None          # nothing requested
+    assert default_pool() is None
+    monkeypatch.setenv("REPRO_DEVICES", "1")
+    assert len(default_pool()) == 1
+    assert len(pool_for(GAConfig())) == 1        # env fallback
+    # an explicit cfg wins over the env
+    cfg = GAConfig(devices=(0, 0))
+    assert len(pool_for(cfg)) == 2
+    monkeypatch.setenv("REPRO_DEVICES", "")      # empty = unset
+    assert default_pool() is None
+
+
+def test_gaconfig_devices_normalization():
+    assert GAConfig().devices is None
+    assert GAConfig(devices=4).devices == 4
+    assert GAConfig(devices=[0, 1]).devices == (0, 1)
+    assert GAConfig(devices="all").devices == "all"
+    assert GAConfig(devices="0,2").devices == "0,2"
+    # bad specs must fail AT CONSTRUCTION, not deep inside a chunk dispatch
+    for bad in (0, -2, (), (0, -1), True, "bogus", "0,-2", "-1", 4.0):
+        with pytest.raises(ValueError):
+            GAConfig(devices=bad)
+
+
+# --------------------------------------------------------------------------
+# in-flight queue
+# --------------------------------------------------------------------------
+
+def test_in_flight_queue_ordering_and_depth():
+    collected = []
+
+    def collect(tag):
+        collected.append(tag)
+        return [f"r{tag}"]
+
+    q = InFlightQueue(depth=2, collect=collect)
+    out = []
+    for tag in range(5):
+        out.extend(q.push(tag))
+        assert len(q) <= 2                       # never above the bound
+    out.extend(q.drain())
+    assert collected == [0, 1, 2, 3, 4]          # FIFO, submission order
+    assert out == [f"r{t}" for t in range(5)]
+    assert len(q) == 0
+    with pytest.raises(ValueError):
+        InFlightQueue(depth=0, collect=collect)
+
+
+def test_in_flight_queue_keeps_new_entry_when_collect_raises():
+    """The just-pushed entry must be registered before eviction collects:
+    if collecting an older chunk raises, an error-path drain still reaches
+    the new (already-dispatched) one — nothing dispatched is abandoned."""
+    def exploding(tag):
+        if tag == 0:
+            raise RuntimeError("device error on chunk 0")
+        return [tag]
+
+    q = InFlightQueue(depth=1, collect=exploding)
+    q.push(0)
+    with pytest.raises(RuntimeError):
+        q.push(1)                     # evicting chunk 0 fails...
+    assert len(q) == 1                # ...but chunk 1 is still queued
+    assert q.drain() == [1]
+
+
+def test_engine_round_robins_chunks_over_the_pool(monkeypatch):
+    """Chunk i must be dispatched to pool device i % D (pin the assignment,
+    not just the results)."""
+    seen = []
+    real = engine_mod._dispatch_chunk
+
+    def recording(c, cfg, hw, device=None):
+        seen.append(device)
+        return real(c, cfg, hw, device=device)
+
+    monkeypatch.setattr(engine_mod, "_dispatch_chunk", recording)
+    layers = get_model("mnasnet") + get_model("resnet50")  # 60 unique rows
+    specs = [make_variant("1111"), make_variant("1111", PARTFLEX)]
+    cfg = GAConfig(population=4, generations=2, pipeline=True,
+                   devices=(0, 0))               # 2-slot pool, one device
+    search_campaign([(layers, s) for s in specs], cfg)   # 120 rows, 2 chunks
+    pool = pool_for(cfg)
+    assert len(seen) >= 2                        # > ROW_BUCKET rows
+    assert seen == [pool.devices[i % 2] for i in range(len(seen))]
+
+    # no pool requested -> no placement (device stays None end to end)
+    seen.clear()
+    monkeypatch.delenv("REPRO_DEVICES", raising=False)
+    search_campaign([(layers[:4], make_variant("1111"))],
+                    GAConfig(population=4, generations=2))
+    assert seen == [None]
+
+
+# --------------------------------------------------------------------------
+# golden parity: sharded == single-device, bit for bit (4 real devices)
+# --------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_sharded_campaign_bit_identical_to_single_device():
+    """The fig7/fig13-style row set (two models x four variants of a frozen
+    design, fast-mode budget) sharded over 4 simulated host devices must be
+    bit-identical to the single-device run; same for the frozen-design
+    replay and the jax flexion backend."""
+    code = """
+    import dataclasses, os
+    import jax
+    assert len(jax.local_devices()) == 4
+    from repro.core import (FULLFLEX, GAConfig, PARTFLEX,
+                            clear_flexion_reference_cache,
+                            evaluate_fixed_genome_many, flexion_campaign,
+                            get_model, inflex_baseline, make_variant,
+                            search_campaign, search_fixed_config)
+
+    cfg = GAConfig(population=8, generations=4, seed=1)
+    specs = [inflex_baseline(), make_variant('1000', FULLFLEX),
+             make_variant('1111', FULLFLEX), make_variant('1111', PARTFLEX)]
+    reqs = [(get_model(m), s) for m in ('mnasnet', 'alexnet') for s in specs]
+
+    def flat(results):
+        return [(p.runtime, p.energy, p.edp, p.util, p.dram_elems,
+                 p.feasible, tuple(p.history), p.mapping) for r in results
+                for p in r.per_layer]
+
+    base = flat(search_campaign(reqs, cfg))
+    shard = flat(search_campaign(
+        reqs, dataclasses.replace(cfg, devices=4, pipeline=True)))
+    assert base == shard, 'sharded GA campaign drifted'
+
+    genome, _ = search_fixed_config(get_model('alexnet')[:4],
+                                    make_variant('1111'), cfg)
+    rreqs = [(get_model(m), make_variant('1111'), genome)
+             for m in ('mnasnet', 'resnet50', 'alexnet')]
+    base_r = flat(evaluate_fixed_genome_many(rreqs))
+    os.environ['REPRO_DEVICES'] = '4'
+    shard_r = flat(evaluate_fixed_genome_many(rreqs))
+    del os.environ['REPRO_DEVICES']
+    assert base_r == shard_r, 'sharded replay drifted'
+
+    os.environ['REPRO_FLEXION_BACKEND'] = 'jax'
+    rows = [(s, get_model('mnasnet')[0], 0) for s in specs]
+    clear_flexion_reference_cache()
+    a = flexion_campaign(rows, mc_samples=2000, seed=0)
+    os.environ['REPRO_DEVICES'] = '4'
+    clear_flexion_reference_cache()
+    b = flexion_campaign(rows, mc_samples=2000, seed=0)
+    assert [(r.hf, r.wf) for r in a] == [(r.hf, r.wf) for r in b], \\
+        'sharded jax flexion drifted'
+    print('PARITY OK')
+    """
+    out = run_subprocess(code, devices=4)
+    assert "PARITY OK" in out
