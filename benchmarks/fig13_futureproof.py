@@ -4,22 +4,35 @@ Rows: InFlex-0000-Alexnet-Opt (the hardened 2014 design), InFlex-0000-X-Opt
 (re-designed per future model), and flexible variants of the 2014 design.
 Values: runtime normalized to the 2014 design per model.  Paper headline:
 FullFlex-1111 gains 11.8x geomean on future DNNs.
+
+This repo extends the sweep with the fifth representation axis: every
+T/O/P/S class also runs with the R bit set (5-char class strings — 31
+nonzero classes + the InFlex-00000 baseline row = the full 2^5 taxonomy),
+and each row carries both flexion columns (workload-agnostic H-F and the
+future-suite W-F).
 """
 from __future__ import annotations
 
 from repro.core import (clear_flexion_reference_cache, future_proofing_study,
                         geomean_speedup)
 
-from .common import Table, bench_mode, campaign_mode, ga_budget
+from .common import Table, campaign_mode, ga_budget
 
-CLASSES_DEFAULT = ("1000", "0100", "0010", "0001", "0011", "1100", "1111")
-CLASSES_FULL = ("1000", "0100", "0010", "0001", "0011", "0101", "1001",
+# the paper's 15 nonzero T/O/P/S classes (R pinned; legacy 4-char names keep
+# the committed v4 row identities bit-for-bit)
+CLASSES_TOPS = ("1000", "0100", "0010", "0001", "0011", "0101", "1001",
                 "0110", "1010", "1100", "1110", "1011", "0111", "1101",
                 "1111")
+# the 16 R-open classes: every T/O/P/S prefix with the R bit set
+CLASSES_R = tuple(f"{i:04b}1" for i in range(16))
+# full 2^5 sweep (31 nonzero classes; InFlex-00000 is the baseline row)
+CLASSES_5AXIS = CLASSES_TOPS + CLASSES_R
 
 # the sweep's model set (run.py sizes the campaign warmup off this)
 MODELS = ("alexnet", "mnasnet", "resnet50", "mobilenetv2", "bert",
           "dlrm", "ncf")
+
+BASE = "alexnet"
 
 
 def run(print_fn=print):
@@ -28,28 +41,32 @@ def run(print_fn=print):
     models = MODELS
     timings = {}
     flexion = {}
+    wflexion = {}
     # cache-cold so the recorded flexion phase is reproducible when fig13
     # runs alone (fig7's campaign would otherwise pre-warm the C_X cache)
     clear_flexion_reference_cache()
     table = future_proofing_study(
-        base_model="alexnet", future_models=models,
-        class_strs=CLASSES_FULL if bench_mode() == "full"
-        else CLASSES_DEFAULT,
-        cfg=cfg, campaign=campaign, timings=timings, flexion=flexion)
+        base_model=BASE, future_models=models, class_strs=CLASSES_5AXIS,
+        cfg=cfg, campaign=campaign, timings=timings, flexion=flexion,
+        wflexion=wflexion)
 
     t = Table("Fig 13 — runtime normalized to InFlex0000-Alexnet-Opt",
-              ["accel"] + list(models) + ["geomean_speedup", "H-F"])
+              ["accel"] + list(models) + ["geomean_speedup", "H-F", "W-F"])
     derived = {}
     for row_name, cols in table.items():
         gm = geomean_speedup(table, row_name)
         t.add(row_name, *[round(cols[m], 4) for m in models], round(gm, 2),
-              flexion.get(row_name, float("nan")))
+              flexion.get(row_name, float("nan")),
+              wflexion.get(row_name, float("nan")))
         derived[row_name] = gm
     t.show(print_fn)
 
-    full_row = next(r for r in table if r.startswith("FullFlex1111"))
-    part_row = next((r for r in table if r.startswith("PartFlex1111")), None)
-    future = [m for m in models if m != "alexnet"]
+    # exact row names (a startswith probe would conflate FullFlex1111-* with
+    # FullFlex11110/11111-* in the 5-axis sweep)
+    full_row = f"FullFlex1111-{BASE}-Opt"
+    full5_row = f"FullFlex11111-{BASE}-Opt"
+    part_row = f"PartFlex1111-{BASE}-Opt"
+    future = [m for m in models if m != BASE]
     out = {
         "fullflex1111_geomean_future": geomean_speedup(table, full_row,
                                                        future),
@@ -60,8 +77,17 @@ def run(print_fn=print):
         # whole C_X (H-F exactly 1) and the hard-partitioned one sits inside
         # the paired-sampling bound
         "fullflex1111_hf": flexion[full_row],
-        "partflex1111_hf": (flexion[part_row] if part_row
-                            else float("nan")),
+        "partflex1111_hf": flexion.get(part_row, float("nan")),
+        # fifth-axis rows: the full 2^5 sweep's headline variant plus the
+        # W-F column anchors (schema v5)
+        "fullflex11111_geomean_future": geomean_speedup(table, full5_row,
+                                                        future),
+        "fullflex11111_hf": flexion[full5_row],
+        "fullflex1111_wf": wflexion[full_row],
+        "fullflex11111_wf": wflexion[full5_row],
+        "partflex1111_wf": wflexion.get(part_row, float("nan")),
+        # 31 nonzero classes + the InFlex-00000 baseline = 2^5 taxonomy
+        "classes_swept": len(CLASSES_5AXIS) + 1,
     }
     out["_phases"] = timings
     return out

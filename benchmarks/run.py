@@ -58,7 +58,7 @@ BENCHES = {
     "bridge": (bridge_validation, "long_decode_speedup"),
 }
 
-BENCH_SCHEMA = "repro-bench-mapper/v4"
+BENCH_SCHEMA = "repro-bench-mapper/v5"
 
 # benches whose derived metrics are pure functions of the MSE engines or the
 # (seed-deterministic) flexion estimators (the golden-parity gate only
@@ -160,7 +160,7 @@ def _speedup_row(rows_a, rows_b):
 
 
 def _bench_json(engine_rows, engine_results, devices=None):
-    """BENCH artifact (schema v4): per-pass per-bench us_per_call + derived
+    """BENCH artifact (schema v5): per-pass per-bench us_per_call + derived
     metrics (+ campaign phase timings), pairwise speedups between passes,
     and — when a ``--devices`` pass ran — a ``device_scaling`` block
     recording the pool size and the campaign → sharded-campaign speedup."""

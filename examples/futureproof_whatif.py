@@ -2,6 +2,12 @@
 2020s workloads (BERT, DLRM, NCF...).  How much does design-time flexibility
 future-proof it?
 
+Class strings here are 5-axis: a trailing fifth character drives the
+representation (bit-width) axis, e.g. "11111" opens T/O/P/S *and* R.  The
+fig13 bench sweeps the full 2^5 = 32-class taxonomy
+(``benchmarks.fig13_futureproof.CLASSES_5AXIS``); this example keeps a small
+contrast set.
+
 Run:  PYTHONPATH=src python examples/futureproof_whatif.py
 """
 from repro.core import GAConfig, future_proofing_study, geomean_speedup
@@ -9,7 +15,7 @@ from repro.core import GAConfig, future_proofing_study, geomean_speedup
 models = ("alexnet", "mnasnet", "bert", "dlrm", "ncf")
 table = future_proofing_study(
     base_model="alexnet", future_models=models,
-    class_strs=("1000", "0010", "1111"),
+    class_strs=("1000", "0010", "1111", "11111"),
     cfg=GAConfig(population=48, generations=24))
 
 print(f"{'accel':34s}" + "".join(f"{m:>12s}" for m in models)
@@ -20,7 +26,11 @@ for row, cols in table.items():
           + f"{gm:12.2f}")
 
 future = [m for m in models if m != "alexnet"]
-full_row = next(r for r in table if r.startswith("FullFlex1111"))
+# exact row name: startswith would also match the R-open FullFlex11111 row
+full_row = "FullFlex1111-alexnet-Opt"
 gm = geomean_speedup(table, full_row, future)
 print(f"\nFullFlex-1111 future-proofing geomean on future models: {gm:.1f}x"
       f"  (paper reports 11.8x over its 7-model suite)")
+full5_row = "FullFlex11111-alexnet-Opt"
+gm5 = geomean_speedup(table, full5_row, future)
+print(f"FullFlex-11111 (R axis open too): {gm5:.1f}x")

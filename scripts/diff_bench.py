@@ -23,9 +23,37 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks._compare import public_derived, value_match  # noqa: E402
 
+# schema-v5 contract: metrics every fresh artifact must carry per bench (a
+# regression that silently drops the fifth-axis sweep or the W-F columns
+# fails here even when the anchor predates them)
+REQUIRED_KEYS = {
+    "fig13": ("fullflex1111_geomean_future", "fullflex1111_hf",
+              "partflex1111_hf", "fullflex11111_geomean_future",
+              "fullflex11111_hf", "fullflex1111_wf", "fullflex11111_wf",
+              "classes_swept"),
+    "table3": ("fullflex_overhead_pct", "rflex_overhead_pct",
+               "fullflex5_overhead_pct"),
+}
+
 
 def _metrics(cell):
     return public_derived(cell.get("derived", {}))
+
+
+def missing_required(new: dict):
+    """Yields (engine, bench, key) for required v5 keys absent from the
+    fresh artifact's cells (anchor cells are exempt: old anchors predate
+    the keys, and the union diff already flags asymmetric cells)."""
+    if str(new.get("schema", "")) < "repro-bench-mapper/v5":
+        return
+    for engine, benches in new.get("engines", {}).items():
+        for bench, keys in REQUIRED_KEYS.items():
+            if bench not in benches:
+                continue
+            got = _metrics(benches[bench])
+            for key in keys:
+                if key not in got:
+                    yield engine, bench, key
 
 
 def diff(new: dict, anchor: dict, rtol: float = 0.0):
@@ -64,6 +92,13 @@ def main(argv=None) -> int:
         print("error: no overlapping (engine, bench) pairs to compare",
               file=sys.stderr)
         return 2
+    dropped = list(missing_required(new))
+    for engine, bench, key in dropped:
+        print(f"MISSING [{engine}] {bench}.{key}: required schema-v5 "
+              f"metric absent from the fresh artifact", file=sys.stderr)
+    if dropped:
+        print(f"{len(dropped)} required metric(s) missing", file=sys.stderr)
+        return 1
     for engine, bench, key, a, b in mismatches:
         print(f"MISMATCH [{engine}] {bench}.{key}: {a!r} != anchor {b!r}",
               file=sys.stderr)

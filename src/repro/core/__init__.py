@@ -1,9 +1,11 @@
 """Core: the paper's contribution — accelerator flexibility formalism (TOPS
-axes, 16 classes, flexion metrics), analytical cost model, GAMMA-style
-constrained GA mapper, and the flexibility-aware DSE toolflow.
+axes + this repo's fifth representation axis R, 16/32 classes, flexion
+metrics), analytical cost model, GAMMA-style constrained GA mapper, and the
+flexibility-aware DSE toolflow.
 """
 from .area_model import AreaReport, area_of
-from .classes import ALL_CLASSES, PRIOR_WORK, classify, describe
+from .classes import (ALL_CLASSES, ALL_CLASSES_5, PRIOR_WORK, classify,
+                      describe)
 from .cost_model import (CostResult, evaluate_mapping, evaluate_population,
                          evaluate_rows, lower_bound_cycles)
 from .dse import (DSEResult, design_fixed_accelerator, future_proofing_study,
@@ -19,13 +21,16 @@ from .mapper import (GAConfig, MapperResult, ModelResult,
                      search_model, search_model_batched,
                      search_specs_batched)
 from .mapspace import Mapping, MapSpace, mapspace_for, workload_space_size
+from .precision import (FULL_BITS, PART_BITS, bytes_of, element_scale,
+                        mac_scale, native_bits)
 from .spec import (FULLFLEX, INFLEX, PARTFLEX, FlexSpec, HWConfig, OrderSpec,
-                   ParallelSpec, ShapeSpec, TileSpec, inflex_baseline,
-                   make_variant)
+                   ParallelSpec, RepresentationSpec, ShapeSpec, TileSpec,
+                   inflex_baseline, make_variant)
 from .workloads import MODEL_ZOO, Layer, conv, dwconv, gemm, get_model
 
 __all__ = [
-    "AreaReport", "area_of", "ALL_CLASSES", "PRIOR_WORK", "classify",
+    "AreaReport", "area_of", "ALL_CLASSES", "ALL_CLASSES_5", "PRIOR_WORK",
+    "classify",
     "describe", "CostResult", "evaluate_mapping", "evaluate_population",
     "evaluate_rows", "lower_bound_cycles", "DSEResult",
     "design_fixed_accelerator", "future_proofing_study", "geomean_speedup",
@@ -38,8 +43,11 @@ __all__ = [
     "search_campaign", "search_fixed_config", "search_fixed_configs",
     "search_model", "search_model_batched", "search_specs_batched",
     "Mapping", "MapSpace", "mapspace_for", "workload_space_size",
+    "FULL_BITS", "PART_BITS", "bytes_of", "element_scale", "mac_scale",
+    "native_bits",
     "FULLFLEX", "INFLEX", "PARTFLEX", "FlexSpec", "HWConfig", "OrderSpec",
-    "ParallelSpec", "ShapeSpec", "TileSpec", "inflex_baseline",
+    "ParallelSpec", "RepresentationSpec", "ShapeSpec", "TileSpec",
+    "inflex_baseline",
     "make_variant", "MODEL_ZOO", "Layer", "conv", "dwconv", "gemm",
     "get_model",
 ]

@@ -8,6 +8,10 @@ inflexible accelerator (MACs + buffers + NoC) plus per-axis adders:
   O: extra address counters/generators + per-PE count-up register
   P: 3 address counters/generators + per-PE reduction-path mux
   S: multicast-capable distribution NoC + per-PE output demux + reduction NoC
+  R: per-PE subword gating/recombination muxes + a width-select config
+     register (the MAC array itself is sized for the *native* width; wider
+     operands run bit-serially, which the cost model charges in cycles, not
+     area — so R-flex stays within the paper's <2% overhead envelope)
 
 Constants are calibrated so the relative overheads reproduce Table 3
 (InFlex 736,843 um^2; FullFlex +0.37%; T +0.004%... the paper's Table 3
@@ -19,6 +23,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Dict
 
+from .precision import mac_scale, native_bits
 from .spec import FlexSpec, HWConfig, INFLEX
 
 # 15nm-equivalent component areas (um^2). Calibrated against Table 3 at the
@@ -49,9 +54,16 @@ class AreaReport:
         return 100.0 * (self.total_area - self.base_area) / self.base_area
 
 
+def mac_array_area(hw: HWConfig) -> float:
+    """MAC array area, precision-dependent: multiplier area scales
+    quadratically with the native operand width (MAC_AREA is calibrated at
+    8-bit, so the default HW scales by exactly 1.0)."""
+    return hw.num_pes * MAC_AREA * mac_scale(native_bits(hw), 8)
+
+
 def base_accelerator_area(hw: HWConfig) -> float:
     kb = hw.buffer_bytes / 1024.0
-    return (hw.num_pes * MAC_AREA + kb * SRAM_AREA_PER_KB
+    return (mac_array_area(hw) + kb * SRAM_AREA_PER_KB
             + hw.num_pes * NOC_AREA_PER_PE)
 
 
@@ -81,6 +93,17 @@ def parallel_flex_area(hw: HWConfig, n_pairs: int) -> float:
         + math.log2(max(n_pairs, 2)) * REG_AREA
 
 
+def repr_flex_area(hw: HWConfig, n_bits_options: int) -> float:
+    # per-PE subword gating/recombination mux (one 2:1-equivalent per
+    # selectable width step) + a log2(n)-bit width-select config register;
+    # NOT a wider multiplier — sub-native widths gate the existing array and
+    # super-native widths run bit-serially (charged in cycles by the cost
+    # model), which keeps R the cheap axis the ISA-based prior work reports.
+    import math
+    sel = math.log2(max(n_bits_options, 2))
+    return hw.num_pes * MUX_AREA_PER_CHOICE * sel + sel * REG_AREA
+
+
 def shape_flex_area(hw: HWConfig, n_shapes: int) -> float:
     # multicast muxing on the row/column distribution spines + reduction NoC
     # forward/L2 demux per edge PE (paper Fig 4d) — NOT per-PE, which is why
@@ -94,7 +117,8 @@ def shape_flex_area(hw: HWConfig, n_shapes: int) -> float:
 def area_of(spec: FlexSpec) -> AreaReport:
     hw = spec.hw
     base = base_accelerator_area(hw)
-    ov: Dict[str, float] = {"T": 0.0, "O": 0.0, "P": 0.0, "S": 0.0}
+    ov: Dict[str, float] = {"T": 0.0, "O": 0.0, "P": 0.0, "S": 0.0,
+                            "R": 0.0}
     if spec.tile.flex != INFLEX:
         ov["T"] = tile_flex_area(hw, soft_partition=spec.tile.flex == "full")
     if spec.order.flex != INFLEX:
@@ -103,6 +127,9 @@ def area_of(spec: FlexSpec) -> AreaReport:
         ov["P"] = parallel_flex_area(hw, len(spec.parallel.pair_table()))
     if spec.shape.flex != INFLEX:
         ov["S"] = shape_flex_area(hw, len(spec.shape.shape_table(hw.num_pes)))
+    if spec.representation.flex != INFLEX:
+        ov["R"] = repr_flex_area(
+            hw, len(spec.representation.bits_table(native_bits(hw))))
 
     total = base + sum(ov.values())
     kb = hw.buffer_bytes / 1024.0

@@ -27,6 +27,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .precision import element_scale, mac_scale, native_bits
 from .spec import HWConfig
 from .workloads import C, K, NUM_DIMS, R, S, X, Y
 
@@ -90,7 +91,8 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
                           depthwise: jnp.ndarray,
                           tiles: jnp.ndarray, order: jnp.ndarray,
                           par: jnp.ndarray, shape_rc: jnp.ndarray,
-                          hw: HWConfig, hard_partition) -> CostResult:
+                          hw: HWConfig, hard_partition,
+                          repr_bits=None) -> CostResult:
     """Cost one mapping of one layer.  All args are arrays => vmap-friendly.
 
     dims: (6,) int   layer (K, C, Y, X, R, S)
@@ -103,7 +105,20 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
     hard_partition: () bool — may be a *traced* array, so one compiled
         program can evaluate rows of different flexibility specs (the batched
         engine batches a whole model, optionally several specs, per dispatch).
+    repr_bits: () int operand bit-width (R axis), or None for the native
+        width.  Buffer occupancy, DRAM/L2 traffic/bandwidth, access energies
+        and compute throughput all scale linearly with bits/native (subword
+        SIMD below native, bit-serial above); MAC energy quadratically.  At
+        the native width every scale is exactly 1.0 — an IEEE-exact identity,
+        so pinned-R results are bit-identical to the pre-R model.
     """
+    if repr_bits is None:
+        bscale = jnp.float32(1.0)
+        mscale = jnp.float32(1.0)
+    else:
+        nb = jnp.float32(native_bits(hw))
+        bscale = element_scale(repr_bits.astype(jnp.float32), nb)
+        mscale = mac_scale(repr_bits.astype(jnp.float32), nb)
     dims = dims.astype(jnp.float32)
     t = jnp.clip(tiles.astype(jnp.float32), 1.0, dims)
     rows = shape_rc[0].astype(jnp.float32)
@@ -123,8 +138,9 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
 
     buf = jnp.float32(hw.buffer_elems)
     cap = buf / 3.0
-    fits_part = (vol_in <= cap) & (vol_w <= cap) & (vol_out <= cap)
-    fits_shared = (vol_in + vol_w + vol_out) <= buf
+    fits_part = (vol_in * bscale <= cap) & (vol_w * bscale <= cap) \
+        & (vol_out * bscale <= cap)
+    fits_shared = (vol_in + vol_w + vol_out) * bscale <= buf
     fits = jnp.where(jnp.asarray(hard_partition), fits_part, fits_shared)
 
     # parallel dims must be distinct and the array must exist
@@ -142,10 +158,11 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
     tp2 = t[par[1]]
     folds = _ceil_div(tp1, rows) * _ceil_div(tp2, cols)
     serial_iters = folds * tile_macs / (tp1 * tp2)  # cycles per tile
-    compute_cycles = num_tiles * serial_iters
+    # throughput scales with operand width (subword SIMD / bit-serial)
+    compute_cycles = num_tiles * serial_iters * bscale
     active = jnp.minimum(tp1, rows) * jnp.minimum(tp2, cols)
     # average utilization incl. folding remainder
-    ideal_cycles = num_tiles * tile_macs / (rows * cols)
+    ideal_cycles = num_tiles * tile_macs / (rows * cols) * bscale
     util = ideal_cycles / jnp.maximum(compute_cycles, 1.0)
 
     # ---- DRAM traffic via loop-nest reuse ---------------------------------
@@ -156,7 +173,7 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
     psum_revisits = jnp.maximum(out_mult - distinct_out, 0.0)
     dram_out = vol_out * (distinct_out + 2.0 * psum_revisits)
     dram_elems = dram_in + dram_w + dram_out
-    dram_cycles = dram_elems / hw.dram_bw
+    dram_cycles = dram_elems * bscale / hw.dram_bw
 
     # ---- L2 traffic: spatial multicast + PE-level stationarity ------------
     def mcast(dep):
@@ -168,7 +185,7 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
     l2_w = total_macs / (mcast(dep_w) * _stationary_reuse(order, t, dep_w))
     l2_out = total_macs / (mcast(dep_o) * _stationary_reuse(order, t, dep_o))
     l2_elems = l2_in + l2_w + l2_out
-    l2_cycles = l2_elems / hw.l2_bw
+    l2_cycles = l2_elems * bscale / hw.l2_bw
 
     # ---- stalls: stationary-tile switch == systolic refill (Fig 3a) -------
     # refill depth follows the *active* extent of the array (idle rows/cols
@@ -181,9 +198,11 @@ def evaluate_mapping_impl(dims: jnp.ndarray, stride: jnp.ndarray,
     runtime = jnp.where(feasible, runtime, BIG)
 
     # ---- energy ------------------------------------------------------------
+    # access energies scale linearly with width, MAC energy quadratically
     l1_accesses = 3.0 * total_macs
-    energy = (dram_elems * hw.e_dram + l2_elems * hw.e_l2
-              + l1_accesses * hw.e_l1 + total_macs * hw.e_mac)
+    energy = (dram_elems * hw.e_dram * bscale + l2_elems * hw.e_l2 * bscale
+              + l1_accesses * hw.e_l1 * bscale
+              + total_macs * hw.e_mac * mscale)
     energy = jnp.where(feasible, energy, BIG)
 
     return CostResult(
@@ -199,11 +218,11 @@ def evaluate_mapping(dims: jnp.ndarray, stride: jnp.ndarray,
                      depthwise: jnp.ndarray,
                      tiles: jnp.ndarray, order: jnp.ndarray,
                      par: jnp.ndarray, shape_rc: jnp.ndarray,
-                     hw: HWConfig, hard_partition: bool = False
-                     ) -> CostResult:
+                     hw: HWConfig, hard_partition: bool = False,
+                     repr_bits=None) -> CostResult:
     """Jitted single-mapping entry point (static hard_partition)."""
     return evaluate_mapping_impl(dims, stride, depthwise, tiles, order, par,
-                                 shape_rc, hw, hard_partition)
+                                 shape_rc, hw, hard_partition, repr_bits)
 
 
 @partial(jax.jit, static_argnames=("hw", "hard_partition"))
@@ -211,15 +230,22 @@ def evaluate_population(dims: jnp.ndarray, stride: jnp.ndarray,
                         depthwise: jnp.ndarray,
                         tiles: jnp.ndarray, order: jnp.ndarray,
                         par: jnp.ndarray, shape_rc: jnp.ndarray,
-                        hw: HWConfig, hard_partition: bool = False
-                        ) -> CostResult:
+                        hw: HWConfig, hard_partition: bool = False,
+                        reprs=None) -> CostResult:
     """vmap of evaluate_mapping over a (P, ...) population of mappings."""
 
-    def one(t_, o_, p_, s_):
-        return evaluate_mapping_impl(dims, stride, depthwise, t_, o_, p_, s_,
-                                     hw, hard_partition)
+    if reprs is None:
+        def one(t_, o_, p_, s_):
+            return evaluate_mapping_impl(dims, stride, depthwise, t_, o_, p_,
+                                         s_, hw, hard_partition)
 
-    return jax.vmap(one)(tiles, order, par, shape_rc)
+        return jax.vmap(one)(tiles, order, par, shape_rc)
+
+    def one_r(t_, o_, p_, s_, r_):
+        return evaluate_mapping_impl(dims, stride, depthwise, t_, o_, p_, s_,
+                                     hw, hard_partition, r_)
+
+    return jax.vmap(one_r)(tiles, order, par, shape_rc, reprs)
 
 
 @partial(jax.jit, static_argnames=("hw",))
@@ -227,16 +253,25 @@ def evaluate_rows(dims: jnp.ndarray, stride: jnp.ndarray,
                   depthwise: jnp.ndarray,
                   tiles: jnp.ndarray, order: jnp.ndarray,
                   par: jnp.ndarray, shape_rc: jnp.ndarray,
-                  hard_partition: jnp.ndarray, hw: HWConfig) -> CostResult:
+                  hard_partition: jnp.ndarray, hw: HWConfig,
+                  reprs=None) -> CostResult:
     """Batch-axis plumbing for the MSE engine: one mapping per *row*, where a
     row is a (layer, spec) pair — every array carries a leading (L,) axis,
-    including the (traced) per-row hard-partition flag."""
+    including the (traced) per-row hard-partition flag (and, when given, the
+    per-row operand bit-width)."""
 
-    def one(d_, s_, w_, t_, o_, p_, sh_, hp_):
-        return evaluate_mapping_impl(d_, s_, w_, t_, o_, p_, sh_, hw, hp_)
+    if reprs is None:
+        def one(d_, s_, w_, t_, o_, p_, sh_, hp_):
+            return evaluate_mapping_impl(d_, s_, w_, t_, o_, p_, sh_, hw, hp_)
 
-    return jax.vmap(one)(dims, stride, depthwise, tiles, order, par,
-                         shape_rc, hard_partition)
+        return jax.vmap(one)(dims, stride, depthwise, tiles, order, par,
+                             shape_rc, hard_partition)
+
+    def one_r(d_, s_, w_, t_, o_, p_, sh_, hp_, r_):
+        return evaluate_mapping_impl(d_, s_, w_, t_, o_, p_, sh_, hw, hp_, r_)
+
+    return jax.vmap(one_r)(dims, stride, depthwise, tiles, order, par,
+                           shape_rc, hard_partition, reprs)
 
 
 def lower_bound_cycles(dims: np.ndarray, depthwise: bool,

@@ -5,9 +5,11 @@ specification) -> selects the map space -> internal MSE (GA) -> best design
 point + HW performance (runtime, energy, area, power).
 
 Also implements the Sec 7 "future-proofing" workflow:
-  1. design InFlex-0000-<model>-Opt: one TOPS config optimized for a model,
+  1. design InFlex-0000-<model>-Opt: one TOPS(R) config optimized for a
+     model (the representation axis is frozen to the searched bit-width),
   2. derive flexible variants that keep the frozen config on inflexible axes
-     but open chosen axes (FullFlex/PartFlex-xxxx-<model>-Opt),
+     but open chosen axes (FullFlex/PartFlex-xxxxx-<model>-Opt; 4-char class
+     strings keep the paper's T/O/P/S sweep with R pinned),
   3. replay all variants on "future" models.
 """
 from __future__ import annotations
@@ -27,7 +29,8 @@ from .mapper import (GAConfig, ModelResult, evaluate_fixed_genome,
                      search_model, search_specs_batched)
 from .mapspace import MapSpace
 from .spec import (FULLFLEX, INFLEX, PARTFLEX, FlexSpec, HWConfig, OrderSpec,
-                   ParallelSpec, ShapeSpec, TileSpec, perm_to_order_str)
+                   ParallelSpec, RepresentationSpec, ShapeSpec, TileSpec,
+                   perm_to_order_str)
 from .workloads import DIMS, Layer, get_model
 
 
@@ -109,7 +112,7 @@ def design_fixed_accelerator(model_name: str, hw: Optional[HWConfig] = None,
 
 def freeze_spec_from_genome(probe_spec: FlexSpec, layers: Sequence[Layer],
                             genome: np.ndarray, name: str) -> FlexSpec:
-    """Turn a search genome into an InFlex-0000 spec (fixed T/O/P/S)."""
+    """Turn a search genome into an InFlex-00000 spec (fixed T/O/P/S/R)."""
     probe = Layer("probe", tuple(int(v) for v in
                                  np.max([l.dims for l in layers], axis=0)))
     space = MapSpace(probe, probe_spec)
@@ -122,15 +125,19 @@ def freeze_spec_from_genome(probe_spec: FlexSpec, layers: Sequence[Layer],
                               fixed_pair=(DIMS[m.parallel[0]],
                                           DIMS[m.parallel[1]])),
         shape=ShapeSpec(flex=INFLEX, fixed_shape=m.shape),
+        representation=RepresentationSpec(flex=INFLEX,
+                                          fixed_bits=int(m.repr_bits)),
     )
 
 
 def open_axes(frozen: FlexSpec, class_str: str, level: str = FULLFLEX,
               name: Optional[str] = None) -> FlexSpec:
     """Open the axes marked '1' in class_str on an otherwise frozen design
-    (FullFlex-xxxx-<model>-Opt in Fig 13)."""
-    assert len(class_str) == 4
-    t, o, p, s = class_str
+    (FullFlex-xxxx-<model>-Opt in Fig 13).  4-char class strings keep the
+    paper's T/O/P/S sweep (R stays pinned); 5-char strings also open the
+    representation axis (FullFlex-xxxx1 ... the 2^5 future-proofing sweep)."""
+    assert len(class_str) in (4, 5)
+    t, o, p, s, r = class_str.ljust(5, "0")
     prefix = {PARTFLEX: "PartFlex", FULLFLEX: "FullFlex"}[level]
     return FlexSpec(
         name=name or f"{prefix}{class_str}-" + frozen.name.split("-", 1)[-1],
@@ -143,6 +150,8 @@ def open_axes(frozen: FlexSpec, class_str: str, level: str = FULLFLEX,
                                      flex=level if p == "1" else INFLEX),
         shape=dataclasses.replace(frozen.shape,
                                   flex=level if s == "1" else INFLEX),
+        representation=dataclasses.replace(
+            frozen.representation, flex=level if r == "1" else INFLEX),
     )
 
 
@@ -160,6 +169,7 @@ def future_proofing_study(base_model: str = "alexnet",
                           campaign: bool = False,
                           timings: Optional[Dict[str, float]] = None,
                           flexion: Optional[Dict[str, float]] = None,
+                          wflexion: Optional[Dict[str, float]] = None,
                           flexion_samples: int = 20_000
                           ) -> Dict[str, Dict[str, float]]:
     """Fig 13: rows = accelerator variants, cols = models, values = runtime
@@ -183,7 +193,14 @@ def future_proofing_study(base_model: str = "alexnet",
     ``flexion_campaign`` batch over all accelerator variants (the
     ``InFlex0000-X-Opt`` family shares the frozen design's value — H-F is
     workload-agnostic, so every InFlex-0000 spec on the same HW resources
-    scores identically)."""
+    scores identically).
+
+    ``wflexion`` (optional dict) likewise adds the W-F column:
+    ``{row_name: wf}`` per table row, estimated through one
+    ``model_flexion_campaign`` batch where each variant spec is paired with
+    the union of every future model's layers (W-F is workload-dependent, so
+    the column reports the variant's average coverage of the whole future
+    suite's map spaces)."""
     cfg = cfg or GAConfig()
     t_acc: Dict[str, float] = timings if timings is not None else {}
 
@@ -245,13 +262,21 @@ def future_proofing_study(base_model: str = "alexnet",
     if include_partflex_1111:
         flex_specs.append(open_axes(frozen, "1111", PARTFLEX))
 
-    if flexion is not None:
+    if flexion is not None or wflexion is not None:
         t0 = time.time()
         fx_specs = [frozen, *flex_specs]
-        reports = flexion_campaign([(s, None, 0) for s in fx_specs],
-                                   mc_samples=flexion_samples, seed=0)
-        flexion.update({s.name: r.hf for s, r in zip(fx_specs, reports)})
-        flexion["InFlex0000-X-Opt"] = flexion[frozen.name]
+        if flexion is not None:
+            reports = flexion_campaign([(s, None, 0) for s in fx_specs],
+                                       mc_samples=flexion_samples, seed=0)
+            flexion.update({s.name: r.hf for s, r in zip(fx_specs, reports)})
+            flexion["InFlex0000-X-Opt"] = flexion[frozen.name]
+        if wflexion is not None:
+            future_layers = [l for m in future_models for l in get_model(m)]
+            wreports = model_flexion_campaign(
+                [(s, future_layers) for s in fx_specs], flexion_samples)
+            wflexion.update(
+                {s.name: r.wf for s, r in zip(fx_specs, wreports)})
+            wflexion["InFlex0000-X-Opt"] = wflexion[frozen.name]
         tick("flexion", t0)
     for spec in flex_specs:
         table[spec.name] = {}

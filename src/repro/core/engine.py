@@ -4,7 +4,7 @@ The paper's DSE loop (Sec 2.4 / Fig 6) runs a full map-space exploration per
 benchmark layer at *every* DSE step.  The serial mapper dispatches one
 ``evaluate_population`` per layer per generation plus host-side numpy GA
 operators — ``L x generations`` device round-trips.  This engine stacks the
-GA state of all rows (a row = one (layer, spec) pair) into an ``(L, P, 9)``
+GA state of all rows (a row = one (layer, spec) pair) into an ``(L, P, 10)``
 genome tensor and moves decode, cost evaluation, selection, crossover and
 mutation into a single ``jax.lax.fori_loop`` with a *traced* generation
 count, so one model-level MSE is exactly one XLA dispatch.
@@ -14,9 +14,10 @@ Compile-once design (the whole fig7+fig13 suite shares one program):
   * rows are processed in fixed-size chunks (``ROW_BUCKET``); short chunks
     are padded with inert rows and large row sets are split, so any model /
     spec-set reuses the same compiled program;
-  * O/P/S index tables are padded to the class-wide C_X maxima (720 orders,
-    30 pairs, |FullFlex shapes|) and indexed modulo their *true* lengths, so
-    InFlex / PartFlex / FullFlex specs all present identical shapes;
+  * O/P/S/R index tables are padded to the class-wide C_X maxima (720
+    orders, 30 pairs, |FullFlex shapes|, R_PAD widths) and indexed modulo
+    their *true* lengths, so InFlex / PartFlex / FullFlex specs all present
+    identical shapes;
   * the hard-partition flag is a traced per-row input, not a static;
   * the generation count is a traced ``fori_loop`` bound; draw arrays are
     zero-padded to a ``GEN_BUCKET`` multiple (never executed past the
@@ -67,7 +68,7 @@ def _bucket(n: int, base: int) -> int:
 class RowResult(NamedTuple):
     """Host-side per-row outcome of a batched GA run."""
 
-    best_genome: np.ndarray    # (9,) i32
+    best_genome: np.ndarray    # (10,) i32
     best_obj: float
     history: List[float]       # best objective per generation
     runtime: float
@@ -78,19 +79,27 @@ class RowResult(NamedTuple):
     feasible: bool
 
 
-@partial(jax.jit, static_argnames=("hw", "n_elite", "objective"))
+@partial(jax.jit,
+         static_argnames=("hw", "n_elite", "objective", "with_repr"))
 def _ga_program(dims, stride, depthwise, tile_lo, tile_hi, hard_partition,
-                table_id, orders, pairs, shapes, lens, pop0, draws, n_gens,
-                hw: HWConfig, n_elite: int, objective: str):
+                table_id, orders, pairs, shapes, reprs, lens, pop0, draws,
+                n_gens, hw: HWConfig, n_elite: int, objective: str,
+                with_repr: bool = False):
     """The whole GA for all rows in one program.
 
     Shapes: dims (L,6) stride (L,) depthwise (L,) tile_lo/hi (L,6)
     hard_partition (L,) table_id (L,) orders (T,720,6) pairs (T,30,2)
-    shapes (T,S,2) lens (T,3) pop0 (L,P,9) draws leaves (Gp,L,Pc,...)
-    n_gens () traced.
+    shapes (T,S,2) reprs (T,R_PAD) lens (T,4) pop0 (L,P,10) draws leaves
+    (Gp,L,Pc,...) n_gens () traced.
+
+    ``with_repr`` (static) selects the cost-model program: False traces the
+    pre-R graph (no width-scaling ops — XLA's FMA fusion then matches the
+    v4 binaries bit-for-bit, the golden-parity discipline for native-pinned
+    rows; ``reprs`` is dead code and DCE'd); True threads each mapping's
+    decoded bit-width into the width-scaled cost model.
     """
     n_rows, population, _ = pop0.shape
-    row_lens = lens[table_id]                        # (L, 3)
+    row_lens = lens[table_id]                        # (L, 4)
     lo_b = tile_lo[:, None, :]
     hi_b = tile_hi[:, None, :]
     lens_b = row_lens[:, None, :]
@@ -100,11 +109,26 @@ def _ga_program(dims, stride, depthwise, tile_lo, tile_hi, hard_partition,
         pi = jnp.mod(pop[..., 7], row_lens[:, None, 1])
         si = jnp.mod(pop[..., 8], row_lens[:, None, 2])
         tid = table_id[:, None]
+        if with_repr:
+            ri = jnp.mod(pop[..., 9], row_lens[:, None, 3])
+            bits = reprs[tid, ri]
+        else:
+            bits = None
         return (pop[..., 0:6], orders[tid, oi], pairs[tid, pi],
-                shapes[tid, si])
+                shapes[tid, si], bits)
 
     def evaluate(pop) -> CostResult:
-        tiles, order, par, shape_rc = decode(pop)
+        tiles, order, par, shape_rc, bits = decode(pop)
+
+        if with_repr:
+            def per_row(d_, s_, w_, hp_, t_, o_, p_, sh_, b_):
+                def per_mapping(t1, o1, p1, s1, b1):
+                    return evaluate_mapping_impl(d_, s_, w_, t1, o1, p1, s1,
+                                                 hw, hp_, b1)
+                return jax.vmap(per_mapping)(t_, o_, p_, sh_, b_)
+
+            return jax.vmap(per_row)(dims, stride, depthwise, hard_partition,
+                                     tiles, order, par, shape_rc, bits)
 
         def per_row(d_, s_, w_, hp_, t_, o_, p_, sh_):
             def per_mapping(t1, o1, p1, s1):
@@ -186,6 +210,7 @@ class ChunkInputs(NamedTuple):
     orders: np.ndarray
     pairs: np.ndarray
     shapes: np.ndarray
+    reprs: np.ndarray
     lens: np.ndarray
     pop0: np.ndarray
     draws: GenDraws
@@ -306,10 +331,13 @@ def _prepare_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
     orders = np.zeros((t_pad,) + tables[0].orders.shape, np.int32)
     pairs = np.zeros((t_pad,) + tables[0].pairs.shape, np.int32)
     shapes = np.zeros((t_pad,) + tables[0].shapes.shape, np.int32)
-    lens = np.ones((t_pad, 3), np.int32)
+    # inert table slots decode to the native width (bits index 0 via lens=1)
+    reprs = np.full((t_pad,) + tables[0].reprs.shape,
+                    8 * hw.bytes_per_elem, np.int32)
+    lens = np.ones((t_pad, 4), np.int32)
     for ti, t in enumerate(tables):
-        orders[ti], pairs[ti], shapes[ti], lens[ti] = (t.orders, t.pairs,
-                                                       t.shapes, t.lens)
+        orders[ti], pairs[ti], shapes[ti], reprs[ti], lens[ti] = (
+            t.orders, t.pairs, t.shapes, t.reprs, t.lens)
 
     # -- per-row state + draws, inert-padded to the buckets -----------------
     dims = np.ones((n_pad, 6), np.int32)
@@ -337,8 +365,9 @@ def _prepare_chunk(rows: Sequence[EngineRow], cfg, hw: HWConfig
     return ChunkInputs(dims=dims, stride=stride, depthwise=depthwise,
                        tile_lo=tile_lo, tile_hi=tile_hi,
                        hard_partition=hard_partition, table_id=table_id,
-                       orders=orders, pairs=pairs, shapes=shapes, lens=lens,
-                       pop0=pop0, draws=draw_stack, gens=gens)
+                       orders=orders, pairs=pairs, shapes=shapes,
+                       reprs=reprs, lens=lens, pop0=pop0, draws=draw_stack,
+                       gens=gens)
 
 
 def _dispatch_chunk(c: ChunkInputs, cfg, hw: HWConfig, device=None):
@@ -348,14 +377,21 @@ def _dispatch_chunk(c: ChunkInputs, cfg, hw: HWConfig, device=None):
     With ``device`` the chunk's arrays are committed there first, so the
     program executes on that device (jit follows committed inputs); the
     program and inputs are otherwise identical, hence identical outputs."""
+    # native-pinned chunks run the pre-R program (bit parity with v4);
+    # only a chunk with an open or off-native R table pays the scaled graph
+    native = 8 * hw.bytes_per_elem
+    with_repr = any(
+        int(l) > 1 or (r[:max(int(l), 1)] != native).any()
+        for r, l in zip(c.reprs, c.lens[:, 3]))
     args = (c.dims, c.stride, c.depthwise, c.tile_lo, c.tile_hi,
             c.hard_partition, c.table_id, c.orders, c.pairs, c.shapes,
-            c.lens, c.pop0, c.draws)
+            c.reprs, c.lens, c.pop0, c.draws)
     if device is not None:
         args = jax.device_put(args, device)
     return _ga_program(
         *args, np.int32(c.gens),
-        hw=hw, n_elite=ga_ops.n_elite(cfg), objective=cfg.objective)
+        hw=hw, n_elite=ga_ops.n_elite(cfg), objective=cfg.objective,
+        with_repr=with_repr)
 
 
 def _collect_chunk(n_rows: int, gens: int, outputs) -> List[RowResult]:

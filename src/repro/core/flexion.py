@@ -8,9 +8,17 @@
       how much of the workload's own map space the accelerator supports.
 
 Per-axis fractions multiply (the axes are a cross product).  O/P/S axes are
-counted exactly from their tables; the T axis intersects a product space with
-buffer-capacity constraints, so we estimate it with Monte-Carlo sampling
-(confidence reported by the standard binomial error).
+counted exactly from their tables, and so is this repo's fifth R axis (the
+operand bit-width menu is a small exact table); the T axis intersects a
+product space with buffer-capacity constraints, so we estimate it with
+Monte-Carlo sampling (confidence reported by the standard binomial error).
+
+The default H-F reference is *R-adaptive* (see
+``flexion_batched._default_reference``): a pinned-R spec is measured against
+a pinned-R FullFlex-T/O/P/S reference — its R term is exactly 1.0 and the
+paper's 4-axis values are preserved — while an R-open spec is measured
+against the FullFlex-R domain.  Pass an explicit 5-axis FullFlex
+``reference`` to put all 32 classes on one scale.
 
 The estimators here are thin single-row wrappers over the batched campaign
 in ``flexion_batched.py``: the hard and soft buffer predicates are evaluated
@@ -48,8 +56,9 @@ def compute_flexion(spec: FlexSpec, layer: Optional[Layer] = None,
                     mc_samples: int = 200_000, seed: int = 0,
                     reference: Optional[FlexSpec] = None,
                     ref_seed: Optional[int] = None) -> FlexionReport:
-    """Flexion of ``spec``.  ``reference`` defines C_X for the exact O/P/S
-    axes (defaults to the FullFlex accelerator with the same HW resources).
+    """Flexion of ``spec``.  ``reference`` defines C_X for the exact O/P/S/R
+    axes (defaults to the FullFlex accelerator with the same HW resources,
+    R-adaptive — see the module docstring).
 
     ``seed`` drives the workload (W-F) sample stream; ``ref_seed`` (default:
     ``seed``) selects the memoized workload-agnostic C_X reference stream —

@@ -42,7 +42,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .spec import FlexSpec, HWConfig, INFLEX, PARTFLEX
+from .spec import (FULLFLEX, FlexSpec, HWConfig, INFLEX, PARTFLEX,
+                   RepresentationSpec)
 from .workloads import C, K, Layer, NUM_DIMS, R, S, X, Y
 
 # Workload-agnostic C_X sample domain (paper Sec 4.1): tiles uniform over
@@ -61,12 +62,13 @@ _REF_CACHE: Dict[Tuple[HWConfig, bool, int, int], float] = {}
 
 def clear_flexion_reference_cache() -> None:
     """Drop ALL memoized flexion state — the C_X reference fractions and
-    the exact O/P/S table counts — so benchmark timings really start
+    the exact O/P/S/R table counts — so benchmark timings really start
     cache-cold; results never depend on cache state."""
     _REF_CACHE.clear()
     _order_count.cache_clear()
     _pair_count.cache_clear()
     _shape_count.cache_clear()
+    _repr_count.cache_clear()
 
 
 def _agnostic_dims() -> np.ndarray:
@@ -96,6 +98,25 @@ def _pair_count(parallel) -> int:
 @lru_cache(maxsize=None)
 def _shape_count(shape, num_pes: int) -> int:
     return len(shape.shape_table(num_pes))
+
+
+@lru_cache(maxsize=None)
+def _repr_count(representation, default_bits: int) -> int:
+    return len(representation.bits_table(default_bits))
+
+
+def _default_reference(spec: FlexSpec) -> FlexSpec:
+    """The FullFlex-T/O/P/S reference accelerator for H-F, with the R axis
+    *mirroring the spec's openness*: a pinned-R spec is measured against a
+    pinned-R reference (ratio exactly 1.0 — the paper's 4-axis H-F values
+    are preserved bit-identically), while an R-open spec is measured against
+    the FullFlex-R domain.  Pass an explicit 5-axis FullFlex ``reference`` to
+    compare pinned and open R classes on one scale (the fig13 32-class
+    sweep's monotonicity tests do)."""
+    if spec.representation.is_flexible:
+        return FlexSpec(hw=spec.hw,
+                        representation=RepresentationSpec(flex=FULLFLEX))
+    return FlexSpec(hw=spec.hw)
 
 
 def _backend() -> str:
@@ -354,11 +375,11 @@ def _campaign(rows: Sequence[Tuple[FlexSpec, Optional[Layer], int,
     # -- assemble reports ----------------------------------------------------
     out: List[FlexionReport] = []
     for (spec, layer, wseed, reference), wj in zip(rows, wl_jobs):
-        ref = reference or FlexSpec(hw=spec.hw)
+        ref = reference or _default_reference(spec)
         hf: Dict[str, float] = {}
         wf: Dict[str, float] = {}
 
-        # O/P/S axes: exact (memoized) table counts
+        # O/P/S/R axes: exact (memoized) table counts
         n_ord = _order_count(spec.order)
         hf["O"] = n_ord / _order_count(ref.order)
         wf["O"] = n_ord / 720.0
@@ -369,6 +390,12 @@ def _campaign(rows: Sequence[Tuple[FlexSpec, Optional[Layer], int,
         n_shape_ref = _shape_count(ref.shape, ref.hw.num_pes)
         hf["S"] = n_shape / n_shape_ref
         wf["S"] = n_shape / n_shape_ref  # workload does not constrain S
+        n_repr = _repr_count(spec.representation,
+                             8 * spec.hw.bytes_per_elem)
+        n_repr_ref = _repr_count(ref.representation,
+                                 8 * ref.hw.bytes_per_elem)
+        hf["R"] = n_repr / n_repr_ref
+        wf["R"] = n_repr / n_repr_ref  # workload does not constrain R
 
         # T axis: Monte-Carlo on paired samples + the memoized reference
         ref_soft = _REF_CACHE[(spec.hw, False, n, ref_seed)]

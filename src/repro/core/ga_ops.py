@@ -33,25 +33,26 @@ import numpy as np
 
 from .workloads import NUM_DIMS
 
-GENOME_LEN = 9
+GENOME_LEN = 10
+N_IDX = 4  # index genes: order / parallel-pair / shape / representation
 
 
 class GenDraws(NamedTuple):
     """All randomness for a GA run (or one generation when sliced with
     :func:`gen_slice`).  Leading axis of every field is the generation."""
 
-    ranks: np.ndarray       # (G, Pc)    i32  rank-selection sorted positions
-    perm: np.ndarray        # (G, Pc)    i32  crossover mate permutation
-    cross_mask: np.ndarray  # (G, Pc, 9) bool per-gene swap mask
-    cross_do: np.ndarray    # (G, Pc)    bool whether a child crosses at all
-    m_tile: np.ndarray      # (G, Pc, 6) bool tile-gene mutation mask
-    step: np.ndarray        # (G, Pc, 6) f32  geometric tile step factor
-    snap: np.ndarray        # (G, Pc, 6) bool snap-to-divisor mask
-    dv: np.ndarray          # (G, Pc, 6) i32  divisor value snapped to
-    m_idx: np.ndarray       # (G, Pc, 3) bool index-gene mutation mask
-    walk: np.ndarray        # (G, Pc, 3) bool +-1 walk (vs resample)
-    stepdir: np.ndarray     # (G, Pc, 3) i32  walk direction (+-1)
-    sampled: np.ndarray     # (G, Pc, 3) i32  resample target index
+    ranks: np.ndarray       # (G, Pc)     i32  rank-selection sorted positions
+    perm: np.ndarray        # (G, Pc)     i32  crossover mate permutation
+    cross_mask: np.ndarray  # (G, Pc, 10) bool per-gene swap mask
+    cross_do: np.ndarray    # (G, Pc)     bool whether a child crosses at all
+    m_tile: np.ndarray      # (G, Pc, 6)  bool tile-gene mutation mask
+    step: np.ndarray        # (G, Pc, 6)  f32  geometric tile step factor
+    snap: np.ndarray        # (G, Pc, 6)  bool snap-to-divisor mask
+    dv: np.ndarray          # (G, Pc, 6)  i32  divisor value snapped to
+    m_idx: np.ndarray       # (G, Pc, 4)  bool index-gene mutation mask
+    walk: np.ndarray        # (G, Pc, 4)  bool +-1 walk (vs resample)
+    stepdir: np.ndarray     # (G, Pc, 4)  i32  walk direction (+-1)
+    sampled: np.ndarray     # (G, Pc, 4)  i32  resample target index
 
 
 def gen_slice(draws: GenDraws, g: int) -> GenDraws:
@@ -74,10 +75,10 @@ def empty_draw_stack(gens_pad: int, n_rows: int, n_children: int) -> GenDraws:
         step=np.ones(shape + (NUM_DIMS,), np.float32),
         snap=np.zeros(shape + (NUM_DIMS,), np.bool_),
         dv=np.ones(shape + (NUM_DIMS,), np.int32),
-        m_idx=np.zeros(shape + (3,), np.bool_),
-        walk=np.zeros(shape + (3,), np.bool_),
-        stepdir=np.ones(shape + (3,), np.int32),
-        sampled=np.zeros(shape + (3,), np.int32),
+        m_idx=np.zeros(shape + (N_IDX,), np.bool_),
+        walk=np.zeros(shape + (N_IDX,), np.bool_),
+        stepdir=np.ones(shape + (N_IDX,), np.int32),
+        sampled=np.zeros(shape + (N_IDX,), np.int32),
     )
 
 
@@ -103,23 +104,34 @@ def _rank_cdf(population: int) -> np.ndarray:
     return np.cumsum(rank_probs(population))
 
 
-# Column layout of the one bulk uniform slab a draw_run consumes:
+# Column layout of the one bulk uniform slab a draw_run consumes (legacy
+# T/O/P/S portion — identical to the 9-gene v4 stream):
 #   0      parent-rank u        1:10   cross_mask     10     cross_do
 #   11:17  m_tile               17:23  snap           23:29  divisor pick
 #   29:32  m_idx                32:35  walk           35:38  resample
 _U_COLS = 38
+
+# R-axis slab (drawn ONLY when the R table is open, i.e. len > 1):
+#   0  cross_mask gene 9        1  m_idx R       2  walk R      3  resample R
+_U_R_COLS = 4
 
 
 def draw_run(rng: np.random.Generator, space, cfg, gens: int,
              n: int) -> GenDraws:
     """Draw every random quantity for ``gens`` generations of ``n`` children.
 
-    Exactly four bulk Generator calls (uniform slab, normal steps, mate
+    Four bulk Generator calls (uniform slab, normal steps, mate
     permutations, walk directions) — a model-level batched search makes one
     ``draw_run`` per row, so per-call Generator overhead is the engine's
     host-side hot path.  Pinned axes (InFlex or unit dims) have their masks
     forced off, so the applied operators never move them; ``space`` supplies
     those constraints (``tile_lo``/``tile_hi``, ``dims``, ``table_lens()``).
+
+    The R-axis slab (two extra calls) is drawn ONLY when the representation
+    table is open: a pinned-R run consumes the byte-identical Generator
+    stream of the v4 9-gene engine, which is what makes the R-pinned golden
+    metrics reproduce bit-identically.  The inert fill (1.0 / +1) makes every
+    R-gene predicate false (1.0 < 0.5, 1.0 < rate for rate <= 1).
     """
     u = rng.random((gens, n, _U_COLS))
     normal = rng.normal(0.0, 0.7, (gens, n, NUM_DIMS))
@@ -127,13 +139,22 @@ def draw_run(rng: np.random.Generator, space, cfg, gens: int,
         np.tile(np.arange(n, dtype=np.int32), (gens, 1)), axis=1)
     stepdir = (rng.integers(0, 2, (gens, n, 3), dtype=np.int32) * 2 - 1)
 
+    lens = np.asarray(space.table_lens(), np.int64)             # (4,)
+    if lens[3] > 1:
+        u_r = rng.random((gens, n, _U_R_COLS))
+        stepdir_r = (rng.integers(0, 2, (gens, n, 1), dtype=np.int32) * 2 - 1)
+    else:
+        u_r = np.ones((gens, n, _U_R_COLS))
+        stepdir_r = np.ones((gens, n, 1), np.int32)
+
     # rank-based parent selection via inverse CDF over sorted positions
     # (clamped: float cumsum can top out a hair below 1.0)
     ranks = np.minimum(
         np.searchsorted(_rank_cdf(cfg.population), u[:, :, 0],
                         side="right"),
         cfg.population - 1).astype(np.int32)
-    cross_mask = u[:, :, 1:10] < 0.5
+    cross_mask = np.concatenate(
+        [u[:, :, 1:10], u_r[:, :, 0:1]], axis=-1) < 0.5
     cross_do = u[:, :, 10] < cfg.crossover_rate
 
     tile_open = space.tile_lo != space.tile_hi                  # (6,)
@@ -145,11 +166,13 @@ def draw_run(rng: np.random.Generator, space, cfg, gens: int,
         divs = divisors(int(space.dims[d]))
         dv[:, :, d] = divs[(u[:, :, 23 + d] * len(divs)).astype(np.int64)]
 
-    lens = np.asarray(space.table_lens(), np.int64)             # (3,)
     idx_open = lens > 1
-    m_idx = (u[:, :, 29:32] < cfg.mutation_rate) & idx_open
-    walk = u[:, :, 32:35] < 0.5
-    sampled = (u[:, :, 35:38] * lens).astype(np.int32)
+    u_midx = np.concatenate([u[:, :, 29:32], u_r[:, :, 1:2]], axis=-1)
+    m_idx = (u_midx < cfg.mutation_rate) & idx_open
+    walk = np.concatenate([u[:, :, 32:35], u_r[:, :, 2:3]], axis=-1) < 0.5
+    sampled = (np.concatenate([u[:, :, 35:38], u_r[:, :, 3:4]], axis=-1)
+               * lens).astype(np.int32)
+    stepdir = np.concatenate([stepdir, stepdir_r], axis=-1)
 
     return GenDraws(ranks=ranks, perm=perm, cross_mask=cross_mask,
                     cross_do=cross_do, m_tile=m_tile, step=step, snap=snap,
@@ -165,12 +188,12 @@ def draw_run(rng: np.random.Generator, space, cfg, gens: int,
 def clip_genomes(g, tile_lo, tile_hi, table_lens, xp=np):
     """Project genomes back into the legal axis-constrained space.
 
-    Works on any leading batch shape ``(..., 9)``; ``tile_lo``/``tile_hi``/
+    Works on any leading batch shape ``(..., 10)``; ``tile_lo``/``tile_hi``/
     ``table_lens`` broadcast against it (per-row bounds for the batched
     engine, flat vectors for the serial one).
     """
     tiles = xp.clip(g[..., 0:6], tile_lo, tile_hi)
-    idx = xp.mod(g[..., 6:9], table_lens)
+    idx = xp.mod(g[..., 6:10], table_lens)
     return xp.concatenate([tiles, idx], axis=-1)
 
 
@@ -188,7 +211,7 @@ def apply_mutation(g, d: GenDraws, tile_lo, tile_hi, table_lens, xp=np):
         1.0, xp.round(tiles.astype(xp.float32) * d.step)).astype(xp.int32)
     newv = xp.where(d.snap, d.dv, stepped)
     tiles = xp.where(d.m_tile, newv, tiles)
-    idx = g[..., 6:9]
+    idx = g[..., 6:10]
     cand = xp.where(d.walk, idx + d.stepdir, d.sampled)
     idx = xp.where(d.m_idx, cand, idx)
     return clip_genomes(xp.concatenate([tiles, idx], axis=-1),
@@ -210,6 +233,6 @@ def initial_population(rng: np.random.Generator, space, cfg) -> np.ndarray:
     base = space.clip(np.concatenate([
         np.minimum(np.asarray(space.spec.tile.fixed_tile, np.int32),
                    space.dims),
-        [0, 0, 0]])[None, :])
+        [0, 0, 0, 0]])[None, :])
     pop[0] = base[0]
     return pop

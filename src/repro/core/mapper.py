@@ -13,7 +13,7 @@ classes and further inside PartFlex subsets:
 Two interchangeable MSE engines sit behind ``GAConfig.engine``:
 
   * ``"batched"`` (default): the whole model's GA — every unique layer's
-    population stacked into an (L, P, 9) tensor — runs as ONE jitted XLA
+    population stacked into an (L, P, 10) tensor — runs as ONE jitted XLA
     program per search (see repro.core.engine).
   * ``"serial"``: the classic per-layer Python loop, one device dispatch per
     layer per generation.
@@ -145,7 +145,7 @@ def _objective_values(res: CostResult, objective: str) -> np.ndarray:
 
 
 class _Operators:
-    """Constraint-respecting GA operators over genome matrices (N, 9).
+    """Constraint-respecting GA operators over genome matrices (N, 10).
 
     Thin host-side wrapper over the shared draw/apply functions in
     ``ga_ops`` — the batched engine applies the identical arithmetic in JAX,
@@ -186,6 +186,9 @@ def _search_serial(layer: Layer, spec: FlexSpec, cfg: GAConfig
     dims = jnp.asarray(layer.dims)
     stride = jnp.asarray(layer.stride)
     dw = jnp.asarray(layer.depthwise)
+    # native-pinned R runs the pre-R cost program (bit parity with v4)
+    r_live = (len(space.repr_table) > 1
+              or int(space.repr_table[0]) != 8 * spec.hw.bytes_per_elem)
 
     best_hist: List[float] = []
     best_g: Optional[np.ndarray] = None
@@ -193,11 +196,12 @@ def _search_serial(layer: Layer, spec: FlexSpec, cfg: GAConfig
     best_idx_res: Optional[Tuple[CostResult, int]] = None
 
     for gen in range(cfg.generations):
-        tiles, orders, pairs, shapes = space.decode_batch(pop)
+        tiles, orders, pairs, shapes, reprs = space.decode_batch(pop)
         res = evaluate_population(
             dims, stride, dw, jnp.asarray(tiles), jnp.asarray(orders),
             jnp.asarray(pairs), jnp.asarray(shapes), spec.hw,
-            space.hard_partition)
+            space.hard_partition,
+            jnp.asarray(reprs) if r_live else None)
         obj = _objective_values(res, cfg.objective)
         order_idx = np.argsort(obj, kind="stable")
         if obj[order_idx[0]] < best_obj:
@@ -309,7 +313,7 @@ def search_model_batched(layers: Sequence[Layer], spec: FlexSpec,
                          cfg: Optional[GAConfig] = None,
                          dedup: bool = True) -> ModelResult:
     """Batched MSE: all unique layers' GAs run in ONE jitted XLA program
-    (an (L, P, 9) genome tensor through a fori_loop over generations) —
+    (an (L, P, 10) genome tensor through a fori_loop over generations) —
     see repro.core.engine.  Same dedup cache and per-layer seeds as the
     serial loop, hence bit-identical results."""
     cfg = cfg or GAConfig()
@@ -399,18 +403,19 @@ def search_specs_batched(layers: Sequence[Layer],
                            dedup=dedup)
 
 
-def _inert_mapping_rows(shape: Tuple[int, ...]
+def _inert_mapping_rows(shape: Tuple[int, ...], native_bits: int = 8
                         ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
-                                   np.ndarray]:
+                                   np.ndarray, np.ndarray]:
     """Feasible placeholder mapping arrays for padded rows/models with any
     leading ``shape``: unit tiles, identity order, the (K, C) pair, a 1x1
-    array.  One definition so every padded dispatch shares the same inert
-    convention."""
+    array, the native operand width.  One definition so every padded
+    dispatch shares the same inert convention."""
     tiles = np.ones(shape + (NUM_DIMS,), np.int32)
     orders = np.tile(np.arange(NUM_DIMS, dtype=np.int32), shape + (1,))
     pairs = np.tile(np.asarray([0, 1], np.int32), shape + (1,))
     shapes = np.ones(shape + (2,), np.int32)
-    return tiles, orders, pairs, shapes
+    reprs = np.full(shape, native_bits, np.int32)
+    return tiles, orders, pairs, shapes, reprs
 
 
 def evaluate_fixed_genome_many(
@@ -445,9 +450,10 @@ def evaluate_fixed_genome_many(
         for layer in layers:
             space = mapspace_for(layer, spec)
             g = space.clip(genome[None, :])
-            t, o, p, s = space.decode_batch(g)
+            t, o, p, s, r = space.decode_batch(g)
             row_data.append((space.dims, layer.stride, layer.depthwise,
-                             t[0], o[0], p[0], s[0], space.hard_partition))
+                             t[0], o[0], p[0], s[0], space.hard_partition,
+                             r[0]))
             mappings.append(space.decode(g[0]))
         bounds.append((start, len(row_data)))
 
@@ -469,15 +475,21 @@ def evaluate_fixed_genome_many(
         dims = np.ones((n_pad, 6), np.int32)
         stride = np.ones(n_pad, np.int32)
         dw = np.zeros(n_pad, np.bool_)
-        tiles, orders, pairs, shapes = _inert_mapping_rows((n_pad,))
+        tiles, orders, pairs, shapes, reprs = _inert_mapping_rows(
+            (n_pad,), 8 * hw.bytes_per_elem)
         hp = np.zeros(n_pad, np.bool_)
-        for i, (d_, s_, w_, t, o, p, sh, h) in enumerate(chunk):
+        for i, (d_, s_, w_, t, o, p, sh, h, r) in enumerate(chunk):
             dims[i], stride[i], dw[i] = d_, s_, w_
             tiles[i], orders[i], pairs[i], shapes[i], hp[i] = t, o, p, sh, h
-        args = (dims, stride, dw, tiles, orders, pairs, shapes, hp)
+            reprs[i] = r
+        # all-native chunks replay through the pre-R program (v4 bit parity)
+        r_live = bool((reprs != 8 * hw.bytes_per_elem).any())
+        args = (dims, stride, dw, tiles, orders, pairs, shapes, hp, reprs)
         if pool is not None:
             args = pool.place(args, ci)
-        queue.push(len(chunk), evaluate_rows(*args, hw))
+        queue.push(len(chunk),
+                   evaluate_rows(*args[:8], hw,
+                                 args[8] if r_live else None))
     queue.drain()
 
     out: List[ModelResult] = []
@@ -519,17 +531,23 @@ def raw_tile_feasibility(tiles: jnp.ndarray,
 
 
 def _fixed_config_objective_impl(dims, strides, dws, mask, tiles, orders,
-                                 pairs, shapes, hw, hard_partition: bool,
-                                 objective: str):
+                                 pairs, shapes, reprs, hw,
+                                 hard_partition: bool, objective: str):
     """Whole-model objective of one shared mapping population — layer sweep,
     buffer-feasibility penalty and reduction all inside one jit (the serial
     version round-tripped raw tiles through host numpy every generation)."""
 
     def per_layer(d, s, w):
-        def per_mapping(t1, o1, p1, s1):
+        if reprs is None:       # native-pinned: pre-R program (v4 parity)
+            def per_mapping(t1, o1, p1, s1):
+                return evaluate_mapping_impl(d, s, w, t1, o1, p1, s1, hw,
+                                             hard_partition)
+            return jax.vmap(per_mapping)(tiles, orders, pairs, shapes)
+
+        def per_mapping(t1, o1, p1, s1, r1):
             return evaluate_mapping_impl(d, s, w, t1, o1, p1, s1, hw,
-                                         hard_partition)
-        return jax.vmap(per_mapping)(tiles, orders, pairs, shapes)
+                                         hard_partition, r1)
+        return jax.vmap(per_mapping)(tiles, orders, pairs, shapes, reprs)
 
     res = jax.vmap(per_layer)(dims, strides, dws)        # (L, P) fields
     m = mask[:, None].astype(jnp.float32)
@@ -545,7 +563,7 @@ def _fixed_config_objective_impl(dims, strides, dws, mask, tiles, orders,
 
 @partial(jax.jit, static_argnames=("hw", "hard_partition", "objective"))
 def _fixed_configs_objective(dims, strides, dws, mask, tiles, orders, pairs,
-                             shapes, hw, hard_partition: bool,
+                             shapes, reprs, hw, hard_partition: bool,
                              objective: str):
     """Model-stacked fixed-config objective: every array gains a leading
     model axis (one genome tensor per shape bucket), so a whole campaign of
@@ -555,12 +573,12 @@ def _fixed_configs_objective(dims, strides, dws, mask, tiles, orders, pairs,
     bit-identical to a per-model dispatch of that body (and results are
     independent of how many models share the stack)."""
 
-    def one(d, s, w, m, t, o, p, sh):
-        return _fixed_config_objective_impl(d, s, w, m, t, o, p, sh, hw,
+    def one(d, s, w, m, t, o, p, sh, r):
+        return _fixed_config_objective_impl(d, s, w, m, t, o, p, sh, r, hw,
                                             hard_partition, objective)
 
     return jax.vmap(one)(dims, strides, dws, mask, tiles, orders, pairs,
-                         shapes)
+                         shapes, reprs)
 
 
 @dataclasses.dataclass
@@ -618,7 +636,7 @@ def search_fixed_configs(
 
     Models are grouped into shape buckets — same padded layer count, same
     hard-partition flag — and each bucket's populations are stacked into one
-    (M, P, 9) genome tensor: each generation is ONE ``_fixed_configs_objective``
+    (M, P, 10) genome tensor: each generation is ONE ``_fixed_configs_objective``
     dispatch for the whole bucket instead of one per model.  Selection,
     crossover and mutation stay host-side per model with each model's own
     Generator (seeded ``cfg.seed``, the single-model convention), so every
@@ -654,16 +672,18 @@ def search_fixed_configs(
         strides_b[:m] = [s.strides for s in group]
         dws_b[:m] = [s.dws for s in group]
         mask_b[:m] = [s.mask for s in group]
-        tiles_b, orders_b, pairs_b, shapes_b = _inert_mapping_rows(
-            (m_pad, cfg.population))
+        tiles_b, orders_b, pairs_b, shapes_b, reprs_b = _inert_mapping_rows(
+            (m_pad, cfg.population), 8 * hw.bytes_per_elem)
         for _ in range(cfg.generations):
             for mi, s in enumerate(group):
                 (tiles_b[mi], orders_b[mi], pairs_b[mi],
-                 shapes_b[mi]) = s.space.decode_batch(s.pop)
+                 shapes_b[mi], reprs_b[mi]) = s.space.decode_batch(s.pop)
+            r_live = bool((reprs_b != 8 * hw.bytes_per_elem).any())
             obj_b = np.asarray(_fixed_configs_objective(
                 dims_b, strides_b, dws_b, mask_b,
                 jnp.asarray(tiles_b), jnp.asarray(orders_b),
                 jnp.asarray(pairs_b), jnp.asarray(shapes_b),
+                jnp.asarray(reprs_b) if r_live else None,
                 hw=hw, hard_partition=hard, objective=cfg.objective))
             for s, obj in zip(group, obj_b):
                 order_idx = np.argsort(obj, kind="stable")

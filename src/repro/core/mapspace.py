@@ -43,14 +43,21 @@ def _shape_table(shape_spec, num_pes: int) -> np.ndarray:
     return shape_spec.shape_table(num_pes)
 
 
+@lru_cache(maxsize=512)
+def _repr_table(repr_spec, default_bits: int) -> np.ndarray:
+    return repr_spec.bits_table(default_bits)
+
+
 @dataclasses.dataclass(frozen=True)
 class Mapping:
-    """A single design point: precise values for T, O, P, S (paper Sec 4.1)."""
+    """A single design point: precise values for T, O, P, S, R (paper Sec 4.1
+    plus this repo's fifth representation axis)."""
 
     tiles: Tuple[int, ...]              # 6 tile sizes (K, C, Y, X, R, S)
     order: Tuple[int, ...]              # permutation, outermost first
     parallel: Tuple[int, int]           # dims on (rows, cols)
     shape: Tuple[int, int]              # (rows, cols)
+    repr_bits: int = 8                  # operand bit-width (R axis)
 
     def as_genome(self, spec: "MapSpace") -> np.ndarray:
         return spec.encode(self)
@@ -65,9 +72,10 @@ class MapSpace:
       genome[6]    index into the order table
       genome[7]    index into the parallel-pair table
       genome[8]    index into the shape table
+      genome[9]    index into the representation (bit-width) table
     """
 
-    GENOME_LEN = 9
+    GENOME_LEN = 10
 
     def __init__(self, layer: Layer, spec: FlexSpec):
         self.layer = layer
@@ -76,6 +84,8 @@ class MapSpace:
         self.order_table = _order_table(spec.order)
         self.pair_table = _pair_table(spec.parallel)
         self.shape_table = _shape_table(spec.shape, spec.hw.num_pes)
+        self.repr_table = _repr_table(spec.representation,
+                                      8 * spec.hw.bytes_per_elem)
         if spec.tile.flex == INFLEX:
             fixed = np.minimum(np.asarray(spec.tile.fixed_tile, np.int32),
                                self.dims)
@@ -93,6 +103,8 @@ class MapSpace:
         g[6] = _row_index(self.order_table, np.asarray(m.order, np.int32))
         g[7] = _row_index(self.pair_table, np.asarray(m.parallel, np.int32))
         g[8] = _row_index(self.shape_table, np.asarray(m.shape, np.int32))
+        g[9] = _row_index(self.repr_table[:, None],
+                          np.asarray([m.repr_bits], np.int32))
         return g
 
     def decode(self, genome: np.ndarray) -> Mapping:
@@ -102,41 +114,62 @@ class MapSpace:
             order=tuple(int(v) for v in self.order_table[int(g[6])]),
             parallel=tuple(int(v) for v in self.pair_table[int(g[7])]),
             shape=tuple(int(v) for v in self.shape_table[int(g[8])]),
+            repr_bits=int(self.repr_table[int(g[9])]),
         )
 
     # -- random sampling (respects per-axis flexibility) ---------------------
     def sample(self, rng: np.random.Generator, n: int) -> np.ndarray:
         """Uniform legal genomes via one bulk uniform draw (the batched
-        engine samples one population per row, so this is a hot path)."""
+        engine samples one population per row, so this is a hot path).
+
+        The R gene is drawn in a SEPARATE call made only when the R table is
+        open — a pinned-R space consumes the byte-identical Generator stream
+        of the v4 9-gene sampler (golden-parity discipline; see ga_ops)."""
         lo = np.concatenate([self.tile_lo, np.zeros(3, np.int64)])
+        lens = self.table_lens().astype(np.int64)
         span = np.concatenate([(self.tile_hi - self.tile_lo + 1).astype(
-            np.int64), self.table_lens().astype(np.int64)])
-        u = rng.random((n, self.GENOME_LEN))
-        return (lo + u * span).astype(np.int32)
+            np.int64), lens[:3]])
+        u = rng.random((n, 9))
+        if lens[3] > 1:
+            u_r = rng.random((n, 1))
+        else:
+            u_r = np.zeros((n, 1))
+        legacy = (lo + u * span).astype(np.int32)
+        r = (u_r * lens[3]).astype(np.int32)
+        return np.concatenate([legacy, r], axis=-1)
 
     def table_lens(self) -> np.ndarray:
-        """(3,) true lengths of the order / pair / shape tables."""
+        """(4,) true lengths of the order / pair / shape / repr tables."""
         return np.asarray([len(self.order_table), len(self.pair_table),
-                           len(self.shape_table)], np.int32)
+                           len(self.shape_table), len(self.repr_table)],
+                          np.int32)
 
     def clip(self, genomes: np.ndarray) -> np.ndarray:
         """Project genomes back into the legal (axis-constrained) space.
-        Accepts any leading batch shape ``(..., 9)``."""
-        return clip_genomes(np.asarray(genomes), self.tile_lo, self.tile_hi,
+        Accepts any leading batch shape ``(..., 10)``; legacy 9-gene T/O/P/S
+        genomes are zero-padded (gene 9 = 0, the first — for pinned specs the
+        only — repr-table entry)."""
+        g = np.asarray(genomes)
+        if g.shape[-1] == self.GENOME_LEN - 1:
+            g = np.concatenate(
+                [g, np.zeros(g.shape[:-1] + (1,), g.dtype)], axis=-1)
+        return clip_genomes(g, self.tile_lo, self.tile_hi,
                             self.table_lens(), np)
 
     # -- decoded arrays for the vectorized cost model ------------------------
     def decode_batch(self, genomes: np.ndarray
-                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        """Decode genomes of any leading shape ``(..., 9)`` into the arrays
+                     ) -> Tuple[np.ndarray, np.ndarray, np.ndarray,
+                                np.ndarray, np.ndarray]:
+        """Decode genomes of any leading shape ``(..., 10)`` into the arrays
         the cost model consumes: tiles ``(..., 6)``, orders ``(..., 6)``,
-        pairs ``(..., 2)``, shapes ``(..., 2)``."""
+        pairs ``(..., 2)``, shapes ``(..., 2)``, repr bits ``(...,)``."""
         g = np.asarray(genomes)
         tiles = g[..., 0:6].astype(np.int32)
         orders = self.order_table[np.mod(g[..., 6], len(self.order_table))]
         pairs = self.pair_table[np.mod(g[..., 7], len(self.pair_table))]
         shapes = self.shape_table[np.mod(g[..., 8], len(self.shape_table))]
-        return tiles, orders, pairs, shapes
+        reprs = self.repr_table[np.mod(g[..., 9], len(self.repr_table))]
+        return tiles, orders, pairs, shapes, reprs
 
     # -- axis-space cardinalities (exact where tractable) ---------------------
     def axis_cardinalities(self) -> dict:
@@ -147,11 +180,12 @@ class MapSpace:
             "O": len(self.order_table),
             "P": len(self.pair_table),
             "S": len(self.shape_table),
+            "R": len(self.repr_table),
         }
 
     def size_upper_bound(self) -> float:
         c = self.axis_cardinalities()
-        return float(c["T"]) * c["O"] * c["P"] * c["S"]
+        return float(c["T"]) * c["O"] * c["P"] * c["S"] * c["R"]
 
 
 @lru_cache(maxsize=4096)
@@ -163,20 +197,26 @@ def mapspace_for(layer: Layer, spec: FlexSpec) -> MapSpace:
 
 
 class PaddedTables(NamedTuple):
-    """One spec's O/P/S index tables padded to the class-wide C_X maxima.
+    """One spec's O/P/S/R index tables padded to the class-wide C_X maxima.
 
     Padding rows (zeros) are never read: the engines index tables modulo the
     *true* lengths in ``lens``.  Because the padded shapes depend only on
-    ``hw`` (720 orders, 30 pairs, |FullFlex shape table| shapes), every spec
-    sharing an HWConfig produces identically-shaped arrays — the batched
-    engine therefore compiles exactly one XLA program per HWConfig instead of
-    one per (spec, model) pair.
+    ``hw`` (720 orders, 30 pairs, |FullFlex shape table| shapes, R_PAD
+    widths), every spec sharing an HWConfig produces identically-shaped
+    arrays — the batched engine therefore compiles exactly one XLA program
+    per HWConfig instead of one per (spec, model) pair.
     """
 
     orders: np.ndarray   # (720, 6) i32
     pairs: np.ndarray    # (30, 2) i32
     shapes: np.ndarray   # (S_max(hw), 2) i32
-    lens: np.ndarray     # (3,) i32 true table lengths
+    reprs: np.ndarray    # (R_PAD,) i32 operand bit-widths
+    lens: np.ndarray     # (4,) i32 true table lengths
+
+
+# R-table padding width: covers FULL_BITS (5 entries) with slack for custom
+# PartFlex menus, while staying a fixed compile-time shape.
+R_PAD = 8
 
 
 @lru_cache(maxsize=64)
@@ -195,11 +235,17 @@ def padded_tables(spec: FlexSpec) -> PaddedTables:
     orders = _order_table(spec.order)
     pairs = _pair_table(spec.parallel)
     shapes = _shape_table(spec.shape, spec.hw.num_pes)
-    lens = np.asarray([len(orders), len(pairs), len(shapes)], np.int32)
+    reprs = _repr_table(spec.representation, 8 * spec.hw.bytes_per_elem)
+    assert len(reprs) <= R_PAD, "representation menu exceeds R_PAD"
+    lens = np.asarray([len(orders), len(pairs), len(shapes), len(reprs)],
+                      np.int32)
+    reprs_pad = np.zeros(R_PAD, np.int32)
+    reprs_pad[: len(reprs)] = reprs
     return PaddedTables(
         orders=_pad_rows(orders, 720),
         pairs=_pad_rows(pairs, 30),
         shapes=_pad_rows(shapes, _num_fullflex_shapes(spec.hw.num_pes)),
+        reprs=reprs_pad,
         lens=lens,
     )
 

@@ -5,8 +5,11 @@ An accelerator is described by:
   * a per-axis flexibility level (InFlex / PartFlex / FullFlex) with an
     axis-specific payload -> defines A_X ⊆ C_X.
 
-The binary class vector [X_T, X_O, X_P, X_S] of the paper's Eq. (1) is derived:
-an axis scores 1 iff it exposes >1 legal choice.
+The binary class vector of the paper's Eq. (1) is derived: an axis scores 1
+iff it exposes >1 legal choice.  This repo extends the paper's four axes
+(T/O/P/S) with a fifth representation axis R (operand bit-width), so the
+class vector is [X_T, X_O, X_P, X_S, X_R]; ``HWConfig.bytes_per_elem`` is
+the InFlex-R *default* width, not a global constant.
 """
 from __future__ import annotations
 
@@ -16,6 +19,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .precision import FULL_BITS, PART_BITS
 from .workloads import DIMS, NUM_DIMS
 
 INFLEX = "inflex"
@@ -165,6 +169,35 @@ class ShapeSpec:
 
 
 @dataclasses.dataclass(frozen=True)
+class RepresentationSpec:
+    """Fifth axis (R): the operand bit-widths the datapath can execute.
+
+    InFlex-R runs only the native width (``fixed_bits``, defaulting to the
+    HW's ``bytes_per_elem``); PartFlex-R offers a small quantized-inference
+    menu (``allowed_bits``); FullFlex-R covers :data:`precision.FULL_BITS`
+    via bit-serial / subword recombination.
+    """
+
+    flex: str = INFLEX
+    fixed_bits: Optional[int] = None     # None -> native (hw.bytes_per_elem*8)
+    allowed_bits: Tuple[int, ...] = PART_BITS
+
+    def bits_table(self, default_bits: int) -> np.ndarray:
+        """(n_bits,) table of selectable operand widths."""
+        if self.flex == INFLEX:
+            bits = [self.fixed_bits or default_bits]
+        elif self.flex == PARTFLEX:
+            bits = sorted(set(self.allowed_bits))
+        else:
+            bits = sorted(set(FULL_BITS))
+        return np.asarray(bits, dtype=np.int32)
+
+    @property
+    def is_flexible(self) -> bool:
+        return self.flex != INFLEX
+
+
+@dataclasses.dataclass(frozen=True)
 class FlexSpec:
     """Full accelerator description = HW resources + per-axis flexibility."""
 
@@ -174,19 +207,22 @@ class FlexSpec:
     order: OrderSpec = dataclasses.field(default_factory=OrderSpec)
     parallel: ParallelSpec = dataclasses.field(default_factory=ParallelSpec)
     shape: ShapeSpec = dataclasses.field(default_factory=ShapeSpec)
+    representation: RepresentationSpec = dataclasses.field(
+        default_factory=RepresentationSpec)
 
-    def class_vector(self) -> Tuple[int, int, int, int]:
-        """[X_T, X_O, X_P, X_S] of paper Eq. (1)."""
+    def class_vector(self) -> Tuple[int, int, int, int, int]:
+        """[X_T, X_O, X_P, X_S, X_R] (paper Eq. (1) + the fifth axis)."""
         return (
             int(self.tile.is_flexible),
             int(self.order.is_flexible),
             int(self.parallel.is_flexible),
             int(self.shape.is_flexible),
+            int(self.representation.is_flexible),
         )
 
     def class_id(self) -> int:
-        t, o, p, s = self.class_vector()
-        return (t << 3) | (o << 2) | (p << 1) | s
+        t, o, p, s, r = self.class_vector()
+        return (t << 4) | (o << 3) | (p << 2) | (s << 1) | r
 
     def class_str(self) -> str:
         return "".join(str(b) for b in self.class_vector())
@@ -196,7 +232,7 @@ class FlexSpec:
 # Named accelerator variants used across the paper's evaluations
 # --------------------------------------------------------------------------
 
-def _axes(t: str, o: str, p: str, s: str, hw: HWConfig, name: str,
+def _axes(t: str, o: str, p: str, s: str, r: str, hw: HWConfig, name: str,
           **kw) -> FlexSpec:
     return FlexSpec(
         name=name, hw=hw,
@@ -208,17 +244,25 @@ def _axes(t: str, o: str, p: str, s: str, hw: HWConfig, name: str,
                                          if k in ("fixed_pair", "allowed_pairs")}),
         shape=ShapeSpec(flex=s, **{k: v for k, v in kw.items()
                                    if k in ("fixed_shape", "building_block")}),
+        representation=RepresentationSpec(
+            flex=r, **{k: v for k, v in kw.items()
+                       if k in ("fixed_bits", "allowed_bits")}),
     )
 
 
 def make_variant(class_str: str, level: str = FULLFLEX,
                  hw: Optional[HWConfig] = None, **kw) -> FlexSpec:
-    """Build e.g. make_variant('1000', 'part') == PartFlex-1000."""
+    """Build e.g. make_variant('1000', 'part') == PartFlex-1000.
+
+    Accepts 4-char (T/O/P/S, R pinned to the native width — the paper's
+    taxonomy, keeping legacy variant names) or 5-char (T/O/P/S/R) class
+    strings.
+    """
     hw = hw or HWConfig()
-    assert len(class_str) == 4 and set(class_str) <= {"0", "1"}
-    lv = [level if b == "1" else INFLEX for b in class_str]
+    assert len(class_str) in (4, 5) and set(class_str) <= {"0", "1"}
+    lv = [level if b == "1" else INFLEX for b in class_str.ljust(5, "0")]
     prefix = {INFLEX: "InFlex", PARTFLEX: "PartFlex", FULLFLEX: "FullFlex"}[level]
-    return _axes(lv[0], lv[1], lv[2], lv[3], hw,
+    return _axes(lv[0], lv[1], lv[2], lv[3], lv[4], hw,
                  name=f"{prefix}{class_str}", **kw)
 
 

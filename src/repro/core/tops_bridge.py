@@ -8,6 +8,10 @@ The paper's four flexibility axes map 1:1 onto distributed-training knobs:
   T (tile size)      -> microbatch count (gradient accumulation)
   O (loop order)     -> remat on/off (recompute vs store — the temporal
                         ordering of the backward pass)
+  R (representation) -> training numerics; pinned to bf16 here (InFlex-R:
+                        the pod is deployed with one dtype), routed through
+                        ``precision.BF16_BITS`` so the width assumption
+                        lives in one place
 
 An *inflexible* deployment hard-codes one point (the production default);
 a *flexible* one lets the mapper pick per-(arch x shape).  The map-space is
@@ -23,12 +27,14 @@ import dataclasses
 import itertools
 from typing import Dict, List, Optional, Tuple
 
+from .precision import BF16_BITS, bytes_of
+
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
 ICI_BW = 50e9
 ICI_LINKS = 4
 HBM_BYTES = 16e9
-BF16 = 2
+BF16 = bytes_of(BF16_BITS)      # R axis: training traffic is bf16 end-to-end
 
 
 @dataclasses.dataclass(frozen=True)

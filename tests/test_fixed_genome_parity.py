@@ -16,8 +16,10 @@ from repro.core import (FULLFLEX, MODEL_ZOO, PARTFLEX, evaluate_fixed_genome,
                         get_model, make_variant)
 from repro.core.mapspace import mapspace_for
 
-# raw genome: baseline-ish tiles + arbitrary (mod-table) O/P/S indices
-GENOME = np.asarray([64, 16, 3, 3, 3, 3, 5, 7, 11], np.int32)
+# raw genome: baseline-ish tiles + arbitrary (mod-table) O/P/S/R indices
+GENOME = np.asarray([64, 16, 3, 3, 3, 3, 5, 7, 11, 0], np.int32)
+# the legacy 9-gene form must keep replaying identically (clip zero-pads R)
+GENOME_V4 = GENOME[:9]
 
 SPECS = [make_variant("1111", FULLFLEX), make_variant("1111", PARTFLEX)]
 
@@ -31,7 +33,11 @@ def test_batched_replay_matches_per_layer_cost_model(model):
         for layer, r in zip(layers, res.per_layer):
             space = mapspace_for(layer, spec)
             g = space.clip(GENOME[None, :])
-            t, o, p, s = space.decode_batch(g)
+            assert np.array_equal(g, space.clip(GENOME_V4[None, :]))
+            t, o, p, s, rbits = space.decode_batch(g)
+            # native-pinned R replays through the pre-R program, so the
+            # bit-exact reference is the legacy (repr_bits=None) jit
+            assert rbits[0] == 8 * spec.hw.bytes_per_elem
             ref = evaluate_mapping(
                 jnp.asarray(space.dims), jnp.asarray(layer.stride),
                 jnp.asarray(layer.depthwise), jnp.asarray(t[0]),

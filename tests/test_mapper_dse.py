@@ -65,14 +65,17 @@ def test_fixed_config_design_and_replay():
     assert res.feasible
     replay = evaluate_fixed_genome(get_model("ncf"), spec, genome)
     assert replay.runtime == pytest.approx(res.runtime, rel=1e-6)
-    # frozen spec is class-0000
-    assert spec.class_str() == "0000"
+    # frozen spec is class-00000 (R pinned to the searched width too)
+    assert spec.class_str() == "00000"
 
 
 def test_open_axes_names_and_classes():
     spec, genome, _ = design_fixed_accelerator(
         "ncf", cfg=GAConfig(population=16, generations=6))
     for cs in ("1000", "0011", "1111"):
+        opened = open_axes(spec, cs)
+        assert opened.class_str() == cs + "0"
+    for cs in ("10001", "11111"):
         opened = open_axes(spec, cs)
         assert opened.class_str() == cs
     # opening axes can only improve runtime

@@ -21,10 +21,14 @@ def test_class_vector_roundtrip():
 
 
 def test_variant_class_strings():
+    # 4-char class strings pin R (trailing 0 in the 5-axis string)
     for cs in ("0000", "1000", "0101", "1111"):
-        assert make_variant(cs).class_str() == cs
+        assert make_variant(cs).class_str() == cs + "0"
         if cs != "0000":
-            assert make_variant(cs, PARTFLEX).class_str() == cs
+            assert make_variant(cs, PARTFLEX).class_str() == cs + "0"
+    # 5-char class strings drive the R axis directly
+    for cs in ("00001", "10101", "11111"):
+        assert make_variant(cs).class_str() == cs
 
 
 def test_prior_work_classified():
@@ -63,7 +67,7 @@ def test_clip_respects_pinned_axes():
     fixed = np.minimum((64, 16, 3, 3, 3, 3), space.dims)
     assert (c[:, 0:6] == fixed).all()
     assert (c[:, 6] == 0).all() and (c[:, 7] == 0).all() \
-        and (c[:, 8] == 0).all()
+        and (c[:, 8] == 0).all() and (c[:, 9] == 0).all()
 
 
 # ---- flexion ---------------------------------------------------------------
@@ -108,3 +112,4 @@ def test_sampled_genomes_always_legal(seed):
     assert (g[:, 6] < len(space.order_table)).all()
     assert (g[:, 7] < len(space.pair_table)).all()
     assert (g[:, 8] < len(space.shape_table)).all()
+    assert (g[:, 9] < len(space.repr_table)).all()

@@ -53,13 +53,14 @@ def test_decoded_tiles_divide_or_clip_into_layer_dims(seed, flex):
     space = MapSpace(LAYER, SPECS[flex])
     rng = np.random.default_rng(seed)
     g = space.clip(rng.integers(-500, 500, size=(32, space.GENOME_LEN)))
-    tiles, orders, pairs, shapes = space.decode_batch(g)
+    tiles, orders, pairs, shapes, reprs = space.decode_batch(g)
     assert (tiles >= 1).all()
     assert (tiles <= np.asarray(LAYER.dims)).all()
     # index genes decode into their tables
     legal_orders = {tuple(r) for r in space.order_table}
     assert all(tuple(o) in legal_orders for o in orders)
     assert (shapes.prod(axis=1) <= space.spec.hw.num_pes).all()
+    assert np.isin(reprs, space.repr_table).all()
 
 
 @given(st.integers(0, 2**31 - 1))
@@ -72,7 +73,7 @@ def _check_pinned_genes_never_mutate(seed):
     """InFlex pins every axis: neither the numpy ``_Operators.mutate`` nor
     the batched engine's JAX mutate may move any gene."""
     spec = inflex_baseline()
-    assert spec.class_str() == "0000"
+    assert spec.class_str() == "00000"
     space = MapSpace(LAYER, spec)
     cfg = GAConfig(population=16, generations=4, seed=seed)
     rng = np.random.default_rng(seed)
@@ -105,7 +106,7 @@ def test_partially_pinned_axes_stay_pinned():
     g = space.sample(rng, 32)
     mutated = _Operators(space, cfg, rng).mutate(g)
     assert (mutated[:, 0:6] == g[:, 0:6]).all()     # tiles pinned
-    assert (mutated[:, 7:9] == g[:, 7:9]).all()     # pair/shape pinned
+    assert (mutated[:, 7:10] == g[:, 7:10]).all()   # pair/shape/repr pinned
     assert (mutated[:, 6] < len(space.order_table)).all()
 
 
