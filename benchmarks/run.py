@@ -14,16 +14,18 @@ Machine-readable perf trajectory:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
   python -m benchmarks.run fig7 fig11 fig13 flexion \
-      --engines serial,batched --campaign --devices 4 \
+      --engines serial,batched --campaign --devices 4 --service 4 \
       --json BENCH_mapper.json
 
 runs every selected bench once per engine — ``--campaign`` adds a pass
 through the cross-model campaign path (batched engine + chunk pipelining +
-whole-sweep row sets, with per-phase timings), and ``--devices N`` adds a
+whole-sweep row sets, with per-phase timings), ``--devices N`` adds a
 ``campaign-dN`` pass with the campaign's chunks round-robin sharded over a
 device pool of N (simulated host devices on CPU via the ``XLA_FLAGS`` line
-above; real accelerators otherwise) — and writes a BENCH JSON artifact
-(per-bench ``us_per_call`` + derived metrics + phases + speedups + a
+above; real accelerators otherwise), and ``--service N`` adds the DSE
+service bench (N concurrent clients vs N sequential campaigns — see
+docs/serving.md) — and writes a BENCH JSON artifact (per-bench
+``us_per_call`` + derived metrics + phases + speedups + a
 ``device_scaling`` block) so future PRs can diff mapper performance
 instead of guessing.
 
@@ -40,7 +42,8 @@ import traceback
 
 from . import (bridge_validation, fig7_tile, fig8_buffer, fig9_order,
                fig10_parallelism, fig11_shape, fig12_arraysize,
-               fig13_futureproof, flexion_bench, roofline, table3_area)
+               fig13_futureproof, flexion_bench, roofline, service_bench,
+               table3_area)
 from ._compare import derived_equal, public_derived
 from .common import bench_mode, campaign_mode
 
@@ -56,16 +59,19 @@ BENCHES = {
     "flexion": (flexion_bench, "partflex1000_hf_T"),
     "roofline": (roofline, "cells_ok"),
     "bridge": (bridge_validation, "long_decode_speedup"),
+    "service": (service_bench, "_speedup_vs_sequential"),
 }
 
-BENCH_SCHEMA = "repro-bench-mapper/v5"
+BENCH_SCHEMA = "repro-bench-mapper/v6"
 
 # benches whose derived metrics are pure functions of the MSE engines or the
 # (seed-deterministic) flexion estimators (the golden-parity gate only
 # covers these; roofline/bridge read external artifacts and table3 never
-# touches the mapper)
+# touches the mapper).  "service" qualifies: its gated keys (client/query
+# counts, parity/cache flags, unique row count) are load- and
+# placement-independent by the service's bit-parity contract.
 PARITY_BENCHES = {"fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-                  "fig13", "flexion"}
+                  "fig13", "flexion", "service"}
 
 
 def _warm_engine(engine: str) -> None:
@@ -160,7 +166,7 @@ def _speedup_row(rows_a, rows_b):
 
 
 def _bench_json(engine_rows, engine_results, devices=None):
-    """BENCH artifact (schema v5): per-pass per-bench us_per_call + derived
+    """BENCH artifact (schema v6): per-pass per-bench us_per_call + derived
     metrics (+ campaign phase timings), pairwise speedups between passes,
     and — when a ``--devices`` pass ran — a ``device_scaling`` block
     recording the pool size and the campaign → sharded-campaign speedup."""
@@ -180,6 +186,14 @@ def _bench_json(engine_rows, engine_results, devices=None):
             if "_phases" in derived:
                 cell["phases"] = {k: round(v * 1e6, 1)   # us, like us_per_call
                                   for k, v in derived["_phases"].items()}
+            # v6: service load metrics ride along as cell columns — real
+            # data in the artifact, but outside "derived" so the diff gate
+            # never compares machine-dependent throughput
+            if "_speedup_vs_sequential" in derived:
+                cell["speedup_vs_sequential"] = \
+                    derived["_speedup_vs_sequential"]
+            if "_throughput_qps" in derived:
+                cell["throughput_qps"] = derived["_throughput_qps"]
             entry[name] = cell
         doc["engines"][engine] = entry
     for a, b, key in (("serial", "batched", "speedup_serial_over_batched"),
@@ -235,16 +249,28 @@ def main(argv=None) -> int:
     engines = None
     campaign = False
     devices = None
+    service_clients = None
     rest = []
     it = iter(argv)
     for a in it:
-        if a in ("--json", "--engines", "--devices"):
+        if a in ("--json", "--engines", "--devices", "--service"):
             value = next(it, None)
             if value is None:
                 print(f"error: {a} expects a value", file=sys.stderr)
                 return 2
             if a == "--json":
                 json_path = value
+            elif a == "--service":
+                # N concurrent DSE-service clients; adds the "service"
+                # bench (concurrent clients vs sequential campaigns)
+                try:
+                    service_clients = int(value)
+                    if service_clients < 1:
+                        raise ValueError(value)
+                except ValueError:
+                    print(f"error: --service expects a positive client "
+                          f"count, got {value!r}", file=sys.stderr)
+                    return 2
             elif a == "--devices":
                 # same grammar as REPRO_DEVICES: count | "all" | i,j indices
                 from repro.dist.pool import parse_device_spec
@@ -263,6 +289,10 @@ def main(argv=None) -> int:
         else:
             rest.append(a)
     names = [a for a in rest if a in BENCHES] or list(BENCHES)
+    if service_clients is not None:
+        os.environ["REPRO_SERVICE_CLIENTS"] = str(service_clients)
+        if "service" not in names:
+            names.append("service")
     if engines is None:
         # a plain `REPRO_CAMPAIGN=1 python -m benchmarks.run` IS a campaign
         # run (the per-pass env setup below would otherwise clear the flag),

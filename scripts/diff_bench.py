@@ -23,9 +23,9 @@ sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
 
 from benchmarks._compare import public_derived, value_match  # noqa: E402
 
-# schema-v5 contract: metrics every fresh artifact must carry per bench (a
-# regression that silently drops the fifth-axis sweep or the W-F columns
-# fails here even when the anchor predates them)
+# schema contract (v5+): metrics every fresh artifact must carry per bench
+# (a regression that silently drops the fifth-axis sweep, the W-F columns,
+# or the v6 service gates fails here even when the anchor predates them)
 REQUIRED_KEYS = {
     "fig13": ("fullflex1111_geomean_future", "fullflex1111_hf",
               "partflex1111_hf", "fullflex11111_geomean_future",
@@ -33,6 +33,11 @@ REQUIRED_KEYS = {
               "classes_swept"),
     "table3": ("fullflex_overhead_pct", "rflex_overhead_pct",
                "fullflex5_overhead_pct"),
+    # v6: the DSE service bench must prove its contract every run — results
+    # bit-identical to solo campaigns, repeats cache-served, and exactly the
+    # unique row set dispatched (throughput/speedup stay "_" sidecars)
+    "service": ("clients", "queries_per_client", "parity_ok",
+                "repeat_cached_ok", "unique_rows"),
 }
 
 

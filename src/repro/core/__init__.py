@@ -10,16 +10,20 @@ from .cost_model import (CostResult, evaluate_mapping, evaluate_population,
                          evaluate_rows, lower_bound_cycles)
 from .dse import (DSEResult, design_fixed_accelerator, future_proofing_study,
                   geomean_speedup, open_axes, run_dse)
-from .engine import EngineRow, RowResult, run_batched_ga, warmup_engine
+from .engine import (EngineRow, RowResult, ga_params_key, row_cache_key,
+                     run_batched_ga, warmup_engine)
 from .flexion import FlexionReport, compute_flexion, model_flexion
 from .flexion_batched import (clear_flexion_reference_cache,
-                              flexion_campaign, model_flexion_campaign)
+                              flexion_cache_stats, flexion_campaign,
+                              model_flexion_campaign)
 from .mapper import (GAConfig, MapperResult, ModelResult,
-                     evaluate_fixed_genome, evaluate_fixed_genome_many,
-                     raw_tile_feasibility, search, search_campaign,
-                     search_fixed_config, search_fixed_configs,
-                     search_model, search_model_batched,
-                     search_specs_batched)
+                     assemble_model_result, evaluate_fixed_genome,
+                     evaluate_fixed_genome_many, plan_model_rows,
+                     raw_tile_feasibility, request_rows, search,
+                     search_campaign, search_fixed_config,
+                     search_fixed_configs, search_model,
+                     search_model_batched, search_specs_batched)
+from .result_cache import ResultCache
 from .mapspace import Mapping, MapSpace, mapspace_for, workload_space_size
 from .precision import (FULL_BITS, PART_BITS, bytes_of, element_scale,
                         mac_scale, native_bits)
@@ -34,12 +38,15 @@ __all__ = [
     "describe", "CostResult", "evaluate_mapping", "evaluate_population",
     "evaluate_rows", "lower_bound_cycles", "DSEResult",
     "design_fixed_accelerator", "future_proofing_study", "geomean_speedup",
-    "open_axes", "run_dse", "EngineRow", "RowResult", "run_batched_ga",
+    "open_axes", "run_dse", "EngineRow", "RowResult", "ga_params_key",
+    "row_cache_key", "run_batched_ga",
     "warmup_engine", "FlexionReport", "compute_flexion", "model_flexion",
-    "clear_flexion_reference_cache", "flexion_campaign",
-    "model_flexion_campaign",
-    "GAConfig", "MapperResult", "ModelResult", "evaluate_fixed_genome",
-    "evaluate_fixed_genome_many", "raw_tile_feasibility", "search",
+    "clear_flexion_reference_cache", "flexion_cache_stats",
+    "flexion_campaign", "model_flexion_campaign", "ResultCache",
+    "GAConfig", "MapperResult", "ModelResult", "assemble_model_result",
+    "evaluate_fixed_genome",
+    "evaluate_fixed_genome_many", "plan_model_rows", "raw_tile_feasibility",
+    "request_rows", "search",
     "search_campaign", "search_fixed_config", "search_fixed_configs",
     "search_model", "search_model_batched", "search_specs_batched",
     "Mapping", "MapSpace", "mapspace_for", "workload_space_size",

@@ -217,10 +217,43 @@ class ChunkInputs(NamedTuple):
     gens: int
 
 
-def run_batched_ga(rows: Sequence[EngineRow], cfg) -> List[RowResult]:
+def ga_params_key(cfg) -> tuple:
+    """The GAConfig fields a row's search RESULT depends on, as a hashable
+    key.  Placement/scheduling knobs (``engine``, ``pipeline``, ``devices``)
+    are deliberately absent — they never change results (the golden-parity
+    contract) — and ``seed`` lives on each :class:`EngineRow`, not here.
+    Two configs with equal keys produce bit-identical rows, which is what
+    lets the DSE service share engine rows across clients with different
+    GAConfig objects."""
+    return ("ga-v1", cfg.population, cfg.generations, cfg.elite_frac,
+            cfg.mutation_rate, cfg.crossover_rate, cfg.tile_divisor_bias,
+            cfg.objective)
+
+
+def row_cache_key(row: EngineRow, cfg) -> tuple:
+    """Canonical persistent-cache key of one engine row: GA params + spec +
+    the spec-relevant layer fields + the row seed.  Layer *names* are
+    excluded (the ``mapper._dedup_key`` discipline), so equal shapes from
+    different models/clients share one cached result."""
+    layer = row.layer
+    return ("mapper-row", ga_params_key(cfg), row.spec,
+            tuple(int(d) for d in layer.dims), int(layer.stride),
+            bool(layer.depthwise), int(row.seed))
+
+
+def run_batched_ga(rows: Sequence[EngineRow], cfg,
+                   row_cache=None) -> List[RowResult]:
     """Search all rows batched; returns per-row results in order (``[]`` for
     an empty row set — an empty campaign is a valid campaign).  All rows
     must share an HWConfig (one static ``hw`` per program).
+
+    With ``row_cache`` (a :class:`repro.core.result_cache.ResultCache`),
+    rows are answered from the cache when a bit-identical search — same
+    :func:`row_cache_key` — was already run, and rows that share a key
+    WITHIN this call (e.g. the same (layer, spec, seed) requested by two
+    service clients) dispatch once.  Cached results are bit-identical to a
+    fresh dispatch by the engine's parity contract, so the returned list is
+    unchanged by any cache state; only the amount of device work varies.
 
     Row sets larger than ``ROW_BUCKET`` run in bucket-sized chunks so that
     *every* call — any model, any number of specs — reuses the same compiled
@@ -248,6 +281,24 @@ def run_batched_ga(rows: Sequence[EngineRow], cfg) -> List[RowResult]:
     """
     if not rows:
         return []
+    if row_cache is not None:
+        keys = [row_cache_key(r, cfg) for r in rows]
+        cached = [row_cache.get(k) for k in keys]
+        todo_rows: List[EngineRow] = []
+        todo_keys: List[tuple] = []
+        first_pos: dict = {}
+        for r, k, c in zip(rows, keys, cached):
+            if c is None and k not in first_pos:
+                first_pos[k] = len(todo_rows)
+                todo_rows.append(r)
+                todo_keys.append(k)
+        fresh = run_batched_ga(todo_rows, cfg)   # row_cache=None: dispatch
+        # merge keeps the first stored result; nothing is cached if the
+        # dispatch raised above, so a retry starts clean
+        stored = {k: row_cache.merge(k, res)
+                  for k, res in zip(todo_keys, fresh)}
+        return [c if c is not None else stored[k]
+                for k, c in zip(keys, cached)]
     hw = rows[0].spec.hw
     assert all(r.spec.hw == hw for r in rows), \
         "batched rows must share an HWConfig"

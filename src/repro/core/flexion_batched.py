@@ -36,12 +36,15 @@ caveat as the engine's GPU/TPU follow-up in docs/mapper.md.
 """
 from __future__ import annotations
 
+import functools
 import os
+import threading
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .result_cache import ResultCache
 from .spec import (FULLFLEX, FlexSpec, HWConfig, INFLEX, PARTFLEX,
                    RepresentationSpec)
 from .workloads import C, K, Layer, NUM_DIMS, R, S, X, Y
@@ -55,9 +58,32 @@ AGNOSTIC_RS = 11
 # sample tensor stays ~200MB even at paper-scale mc_samples
 _CHUNK_SAMPLES = 4_000_000
 
-# (hw, hard, n, seed) -> workload-agnostic tile-fit fraction.  Both the hard
-# and soft entries for a key prefix are filled from ONE paired sample draw.
-_REF_CACHE: Dict[Tuple[HWConfig, bool, int, int], float] = {}
+# (hw, hard, n, seed) -> workload-agnostic tile-fit fraction.  The hard and
+# soft entries for a key prefix come from ONE paired sample draw, and are
+# read/written as an atomic PAIR: a plain dict with back-to-back setdefaults
+# let a concurrent campaign observe a half-populated soft/hard reference
+# (the soft key present, its paired hard key not yet written).
+_REF_CACHE = ResultCache(maxsize=4096)
+
+# the exact-table memos below are shared by every thread; one lock makes
+# each count compute exactly once and keeps cache_clear atomic with respect
+# to in-flight lookups
+_TABLE_LOCK = threading.Lock()
+
+
+def _locked_memo(fn):
+    """``lru_cache`` guarded by ``_TABLE_LOCK`` (shared by all four table
+    counters), exposing ``cache_clear``/``cache_info`` like the bare memo."""
+    cached = lru_cache(maxsize=None)(fn)
+
+    @functools.wraps(fn)
+    def wrapper(*args):
+        with _TABLE_LOCK:
+            return cached(*args)
+
+    wrapper.cache_clear = cached.cache_clear
+    wrapper.cache_info = cached.cache_info
+    return wrapper
 
 
 def clear_flexion_reference_cache() -> None:
@@ -65,10 +91,26 @@ def clear_flexion_reference_cache() -> None:
     the exact O/P/S/R table counts — so benchmark timings really start
     cache-cold; results never depend on cache state."""
     _REF_CACHE.clear()
-    _order_count.cache_clear()
-    _pair_count.cache_clear()
-    _shape_count.cache_clear()
-    _repr_count.cache_clear()
+    with _TABLE_LOCK:
+        _order_count.cache_clear()
+        _pair_count.cache_clear()
+        _shape_count.cache_clear()
+        _repr_count.cache_clear()
+
+
+def flexion_cache_stats() -> Dict[str, Dict[str, int]]:
+    """Hit/miss/size counters of every memoized flexion store: the C_X
+    ``reference`` pair cache plus the four exact-table count memos — the
+    flexion half of ``DSEService.cache_stats()``."""
+    with _TABLE_LOCK:
+        tables = {name: {"hits": fn.cache_info().hits,
+                         "misses": fn.cache_info().misses,
+                         "size": fn.cache_info().currsize}
+                  for name, fn in (("order", _order_count),
+                                   ("pair", _pair_count),
+                                   ("shape", _shape_count),
+                                   ("repr", _repr_count))}
+    return {"reference": _REF_CACHE.stats(), **tables}
 
 
 def _agnostic_dims() -> np.ndarray:
@@ -84,23 +126,24 @@ def _agnostic_volume() -> float:
 # The exact O/P/S axis counts only depend on the (hashable, frozen) axis
 # specs, but materializing the tables — FullFlex shape_table walks all
 # num_pes row counts — costs more than the whole MC evaluation when done
-# per row, so the counts are memoized.
-@lru_cache(maxsize=None)
+# per row, so the counts are memoized (lock-guarded: concurrent campaigns
+# share them).
+@_locked_memo
 def _order_count(order) -> int:
     return len(order.order_table())
 
 
-@lru_cache(maxsize=None)
+@_locked_memo
 def _pair_count(parallel) -> int:
     return len(parallel.pair_table())
 
 
-@lru_cache(maxsize=None)
+@_locked_memo
 def _shape_count(shape, num_pes: int) -> int:
     return len(shape.shape_table(num_pes))
 
 
-@lru_cache(maxsize=None)
+@_locked_memo
 def _repr_count(representation, default_bits: int) -> int:
     return len(representation.bits_table(default_bits))
 
@@ -345,11 +388,20 @@ def _campaign(rows: Sequence[Tuple[FlexSpec, Optional[Layer], int,
     jobs = _Jobs(n)
 
     # -- collect the jobs each row needs ------------------------------------
+    # reference fractions are read as an atomic (soft, hard) PAIR and held
+    # locally: a row either has both values now or owns a job that will
+    # produce both — no later re-read of the shared cache, so a concurrent
+    # campaign (or LRU eviction between here and assembly) cannot expose a
+    # half-populated reference
     ref_jobs: List[Optional[int]] = []
+    ref_vals: List[Optional[Tuple[float, float]]] = []
     wl_jobs: List[Optional[int]] = []
     for spec, layer, wseed, _ in rows:
         hw = spec.hw
-        if (hw, False, n, ref_seed) in _REF_CACHE:
+        pair = _REF_CACHE.get_pair((hw, False, n, ref_seed),
+                                   (hw, True, n, ref_seed))
+        ref_vals.append(pair)
+        if pair is not None:
             ref_jobs.append(None)
         else:
             ref_jobs.append(jobs.add(agn, 1, False,
@@ -365,16 +417,18 @@ def _campaign(rows: Sequence[Tuple[FlexSpec, Optional[Layer], int,
                       else (np.zeros(0), np.zeros(0)))
 
     # -- memoize the C_X reference fractions --------------------------------
-    for (spec, _, _, _), rj in zip(rows, ref_jobs):
+    # merge keeps the first stored pair (deterministic draws make racing
+    # writers equal anyway) and hands back the canonical values
+    for i, ((spec, _, _, _), rj) in enumerate(zip(rows, ref_jobs)):
         if rj is not None:
-            _REF_CACHE.setdefault((spec.hw, False, n, ref_seed),
-                                  float(p_soft[rj]))
-            _REF_CACHE.setdefault((spec.hw, True, n, ref_seed),
-                                  float(p_hard[rj]))
+            ref_vals[i] = _REF_CACHE.merge_pair(
+                (spec.hw, False, n, ref_seed), float(p_soft[rj]),
+                (spec.hw, True, n, ref_seed), float(p_hard[rj]))
 
     # -- assemble reports ----------------------------------------------------
     out: List[FlexionReport] = []
-    for (spec, layer, wseed, reference), wj in zip(rows, wl_jobs):
+    for (spec, layer, wseed, reference), wj, rv in zip(rows, wl_jobs,
+                                                       ref_vals):
         ref = reference or _default_reference(spec)
         hf: Dict[str, float] = {}
         wf: Dict[str, float] = {}
@@ -398,8 +452,8 @@ def _campaign(rows: Sequence[Tuple[FlexSpec, Optional[Layer], int,
         wf["R"] = n_repr / n_repr_ref  # workload does not constrain R
 
         # T axis: Monte-Carlo on paired samples + the memoized reference
-        ref_soft = _REF_CACHE[(spec.hw, False, n, ref_seed)]
-        ref_hard = _REF_CACHE[(spec.hw, True, n, ref_seed)]
+        # (held locally since collection — see above)
+        ref_soft, ref_hard = rv
         if spec.tile.flex == INFLEX:
             # A supports exactly 1 tile point.
             hf["T"] = 1.0 / max(ref_soft * _agnostic_volume(), 1.0)

@@ -269,6 +269,49 @@ def _dedup_key(layer: Layer) -> tuple:
     return (layer.dims, layer.stride, layer.depthwise)
 
 
+def plan_model_rows(layers: Sequence[Layer], dedup: bool = True
+                    ) -> Tuple[List[int], Dict[tuple, int]]:
+    """One model's engine-row plan: ``row_index`` lists the first-occurrence
+    layer indices that become rows, ``seen`` maps each dedup key to its row
+    position.  THE row-planning convention — ``search_model_batched``,
+    ``search_campaign`` and the DSE service all call this one function, so
+    their per-layer GA seeds (``cfg.seed + 1000 * first_occurrence_index``)
+    and dedup behavior can never drift apart."""
+    row_index: List[int] = []
+    seen: Dict[tuple, int] = {}
+    for i, layer in enumerate(layers):
+        key = _dedup_key(layer)
+        if dedup and key in seen:
+            continue
+        seen[key] = len(row_index)
+        row_index.append(i)
+    return row_index, seen
+
+
+def request_rows(layers: Sequence[Layer], spec: FlexSpec, cfg: "GAConfig",
+                 row_index: Sequence[int]) -> List[EngineRow]:
+    """The planned rows as :class:`EngineRow`\\ s with the campaign seed
+    convention (``cfg.seed + 1000 * first_occurrence_index``)."""
+    return [EngineRow(layers[i], spec, cfg.seed + 1000 * i)
+            for i in row_index]
+
+
+def assemble_model_result(layers: Sequence[Layer], spec: FlexSpec,
+                          row_index: Sequence[int], seen: Dict[tuple, int],
+                          row_results: Sequence, dedup: bool = True
+                          ) -> ModelResult:
+    """Fold one request's engine-row results back into a :class:`ModelResult`
+    (the inverse of :func:`plan_model_rows`); deduped layers share their
+    first occurrence's MapperResult object."""
+    per_row = [_row_to_result(layers[i], spec, r)
+               for i, r in zip(row_index, row_results)]
+    if dedup:
+        results = [per_row[seen[_dedup_key(l)]] for l in layers]
+    else:
+        results = list(per_row)
+    return _model_result(results)
+
+
 def _model_result(results: Sequence[MapperResult]) -> ModelResult:
     runtime = float(sum(r.runtime for r in results))
     energy = float(sum(r.energy for r in results))
@@ -311,37 +354,26 @@ def search_model(layers: Sequence[Layer], spec: FlexSpec,
 
 def search_model_batched(layers: Sequence[Layer], spec: FlexSpec,
                          cfg: Optional[GAConfig] = None,
-                         dedup: bool = True) -> ModelResult:
+                         dedup: bool = True,
+                         row_cache=None) -> ModelResult:
     """Batched MSE: all unique layers' GAs run in ONE jitted XLA program
     (an (L, P, 10) genome tensor through a fori_loop over generations) —
     see repro.core.engine.  Same dedup cache and per-layer seeds as the
-    serial loop, hence bit-identical results."""
+    serial loop, hence bit-identical results.  ``row_cache`` answers
+    already-searched rows from a persistent store (see
+    :func:`repro.core.engine.run_batched_ga`) without changing any result."""
     cfg = cfg or GAConfig()
-    row_index: List[int] = []              # first-occurrence layer index
-    seen: Dict[tuple, int] = {}            # dedup key -> row position
-    for i, layer in enumerate(layers):
-        key = _dedup_key(layer)
-        if dedup and key in seen:
-            continue
-        seen[key] = len(row_index)
-        row_index.append(i)
-    rows = [EngineRow(layers[i], spec, cfg.seed + 1000 * i)
-            for i in row_index]
-    row_results = run_batched_ga(rows, cfg)
-    per_row = [_row_to_result(layers[i], spec, r)
-               for i, r in zip(row_index, row_results)]
-    results: List[MapperResult] = []
-    for layer in layers:
-        if dedup:
-            results.append(per_row[seen[_dedup_key(layer)]])
-        else:
-            results.append(per_row[len(results)])
-    return _model_result(results)
+    row_index, seen = plan_model_rows(layers, dedup)
+    rows = request_rows(layers, spec, cfg, row_index)
+    row_results = run_batched_ga(rows, cfg, row_cache=row_cache)
+    return assemble_model_result(layers, spec, row_index, seen, row_results,
+                                 dedup)
 
 
 def search_campaign(requests: Sequence[Tuple[Sequence[Layer], FlexSpec]],
                     cfg: Optional[GAConfig] = None,
-                    dedup: bool = True) -> List[ModelResult]:
+                    dedup: bool = True,
+                    row_cache=None) -> List[ModelResult]:
     """Campaign MSE: many whole-model searches — arbitrary (layers, spec)
     pairs sharing an HWConfig — as ONE engine row set.
 
@@ -356,36 +388,26 @@ def search_campaign(requests: Sequence[Tuple[Sequence[Layer], FlexSpec]],
     are independent, so packing them differently changes nothing — which is
     also why a device pool (``cfg.devices`` / ``REPRO_DEVICES``) can spread
     the chunks without changing any result.  An empty campaign returns
-    ``[]`` (it used to trip the engine's row assert)."""
+    ``[]`` (it used to trip the engine's row assert).  ``row_cache`` (a
+    ``ResultCache``) makes repeat rows — within this campaign or from any
+    earlier cached call — skip their engine dispatch, results unchanged;
+    it is how the DSE service shares rows across client requests."""
     cfg = cfg or GAConfig()
     requests = [(list(layers), spec) for layers, spec in requests]
     all_rows: List[EngineRow] = []
     meta: List[Tuple[List[int], Dict[tuple, int]]] = []
     for layers, spec in requests:
-        row_index: List[int] = []
-        seen: Dict[tuple, int] = {}
-        for i, layer in enumerate(layers):
-            key = _dedup_key(layer)
-            if dedup and key in seen:
-                continue
-            seen[key] = len(row_index)
-            row_index.append(i)
+        row_index, seen = plan_model_rows(layers, dedup)
         meta.append((row_index, seen))
-        all_rows.extend(EngineRow(layers[i], spec, cfg.seed + 1000 * i)
-                        for i in row_index)
-    row_results = run_batched_ga(all_rows, cfg)
+        all_rows.extend(request_rows(layers, spec, cfg, row_index))
+    row_results = run_batched_ga(all_rows, cfg, row_cache=row_cache)
     out: List[ModelResult] = []
     pos = 0
     for (layers, spec), (row_index, seen) in zip(requests, meta):
         chunk = row_results[pos:pos + len(row_index)]
         pos += len(row_index)
-        per_row = [_row_to_result(layers[i], spec, r)
-                   for i, r in zip(row_index, chunk)]
-        if dedup:
-            results = [per_row[seen[_dedup_key(l)]] for l in layers]
-        else:
-            results = per_row
-        out.append(_model_result(results))
+        out.append(assemble_model_result(layers, spec, row_index, seen,
+                                         chunk, dedup))
     return out
 
 

@@ -127,6 +127,12 @@ class FaultTolerantLoop:
         while restarts < self.max_restarts:
             restarts += 1
             state, step = self._start_state()
+            # A restart resumes from the restored checkpoint step, so any
+            # metrics recorded past it belong to work that is about to be
+            # re-run — drop them or the history carries duplicate step keys
+            # (steps between the last checkpoint and the fault appeared once
+            # per restart).
+            history[:] = [m for m in history if m["step"] <= step]
             try:
                 while step < total_steps:
                     if self.injector is not None:

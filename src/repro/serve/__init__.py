@@ -1,3 +1,5 @@
-from .engine import Request, Result, ServeEngine
+from .dse_service import DSEService, DSETicket
+from .engine import Request, Result, ServeEngine, form_wave
 
-__all__ = ["ServeEngine", "Request", "Result"]
+__all__ = ["DSEService", "DSETicket", "ServeEngine", "Request", "Result",
+           "form_wave"]

@@ -9,13 +9,15 @@ batching for TPU.  Greedy or temperature sampling.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional
+from typing import Callable, List, Optional, Sequence, Tuple, TypeVar
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from ..models import ModelConfig, decode_step, init_cache, prefill
+
+_T = TypeVar("_T")
 
 
 @dataclasses.dataclass
@@ -33,6 +35,34 @@ class Result:
     tokens: np.ndarray          # generated tokens (without prompt)
     prompt_len: int
     steps: int
+    error: Optional[str] = None  # set iff the request was rejected
+
+
+def form_wave(queue: List[_T], max_count: int,
+              fits_alone: Callable[[_T], bool],
+              fits_with: Callable[[Sequence[_T], _T], bool]
+              ) -> Tuple[List[_T], List[_T]]:
+    """Admission-controlled FIFO wave formation, shared by the token-serving
+    engine and the DSE service.
+
+    Pops from the FRONT of ``queue`` (in place) into a wave of at most
+    ``max_count`` items: an item that can never run (``fits_alone`` false)
+    is popped into ``rejected`` — it must not crash or starve the wave — and
+    an item that fits alone but not with the current wave ends the wave
+    (FIFO order is preserved: it will head the next wave).  Guarantees
+    progress: a non-empty queue always yields at least one wave or rejected
+    item, so ``run_all``-style drains terminate."""
+    wave: List[_T] = []
+    rejected: List[_T] = []
+    while queue and len(wave) < max_count:
+        nxt = queue[0]
+        if not fits_alone(nxt):
+            rejected.append(queue.pop(0))
+            continue
+        if wave and not fits_with(wave, nxt):
+            break
+        wave.append(queue.pop(0))
+    return wave, rejected
 
 
 class ServeEngine:
@@ -52,20 +82,45 @@ class ServeEngine:
     def submit(self, req: Request):
         self.queue.append(req)
 
-    def _wave(self) -> List[Request]:
-        wave = self.queue[:self.max_batch]
-        self.queue = self.queue[self.max_batch:]
-        return wave
+    def _fits_alone(self, r: Request) -> bool:
+        return len(r.prompt) + r.max_new_tokens <= self.max_len
+
+    def _fits_with(self, wave: Sequence[Request], r: Request) -> bool:
+        # waves left-pad to the longest prompt and decode to the longest
+        # max_new, so the wave's footprint is max(plen) + max(max_new)
+        plen = max(len(x.prompt) for x in wave) if wave else 0
+        max_new = max(x.max_new_tokens for x in wave) if wave else 0
+        return (max(plen, len(r.prompt))
+                + max(max_new, r.max_new_tokens)) <= self.max_len
+
+    def _wave(self) -> Tuple[List[Request], List[Result]]:
+        """Length-aware wave formation.  The old packer popped max_batch
+        requests BEFORE the length assert, so one oversized request both
+        crashed ``run_all`` and lost every request in its wave; now only
+        requests whose combined ``plen + max_new`` fits ``max_len`` pack
+        together, and a single unfittable request yields a per-request
+        error Result instead of an AssertionError."""
+        wave, rejected = form_wave(self.queue, self.max_batch,
+                                   self._fits_alone, self._fits_with)
+        errors = [Result(uid=r.uid, tokens=np.zeros(0, np.int32),
+                         prompt_len=len(r.prompt), steps=0,
+                         error=(f"request {r.uid}: prompt_len "
+                                f"{len(r.prompt)} + max_new_tokens "
+                                f"{r.max_new_tokens} exceeds engine "
+                                f"max_len {self.max_len}"))
+                  for r in rejected]
+        return wave, errors
 
     def run_wave(self) -> List[Result]:
-        wave = self._wave()
+        wave, errors = self._wave()
         if not wave:
-            return []
+            return errors
         B = len(wave)
         plen = max(len(r.prompt) for r in wave)
         max_new = max(r.max_new_tokens for r in wave)
         total = plen + max_new
-        assert total <= self.max_len, "wave exceeds engine max_len"
+        # invariant by construction of _wave (fits_alone/fits_with)
+        assert total <= self.max_len, "wave packer violated max_len"
 
         # left-pad prompts to common length (pad with token 0)
         toks = np.zeros((B, plen), np.int32)
@@ -111,7 +166,7 @@ class ServeEngine:
                 toks_i = toks_i[:int(np.argmax(toks_i == r.eos_id)) + 1]
             results.append(Result(uid=r.uid, tokens=toks_i,
                                   prompt_len=len(r.prompt), steps=steps))
-        return results
+        return errors + results
 
     def _sample(self, logits: jnp.ndarray, wave: List[Request]):
         temps = np.asarray([r.temperature for r in wave], np.float32)

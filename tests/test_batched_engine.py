@@ -95,9 +95,9 @@ def test_dedup_shares_search_across_equal_shapes(monkeypatch):
     calls = []
     real = mapper_mod.run_batched_ga
 
-    def counting(rows, cfg):
+    def counting(rows, cfg, row_cache=None):
         calls.append(len(rows))
-        return real(rows, cfg)
+        return real(rows, cfg, row_cache=row_cache)
 
     monkeypatch.setattr(mapper_mod, "run_batched_ga", counting)
     res = search_model(twins, spec, CFG)

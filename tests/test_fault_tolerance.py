@@ -85,6 +85,41 @@ def test_fault_tolerant_loop_restarts_exactly(tmp_path):
                                np.asarray(final_c["w"]), rtol=1e-6)
 
 
+def test_fault_tolerant_loop_history_no_duplicate_steps(tmp_path):
+    """Regression: `run` used to keep appending to metrics_history across
+    restarts, so the steps between the last checkpoint and the fault
+    appeared once per restart (duplicate step keys).  The history must now
+    hold each step exactly once and match a fault-free run's metrics."""
+
+    def train_step(state, batch):
+        new = {"w": state["w"] + jnp.sum(batch["x"]),
+               "step": state["step"] + 1}
+        return new, {"loss": float(jnp.sum(batch["x"]))}
+
+    def make_state():
+        return {"w": jnp.zeros(()), "step": jnp.asarray(0)}
+
+    def batch_at(step):
+        rng = np.random.default_rng(step)
+        return {"x": jnp.asarray(rng.normal(size=(4,)), jnp.float32)}
+
+    def run(fail_at, path):
+        mgr = CheckpointManager(path, keep=2, async_write=False)
+        loop = FaultTolerantLoop(
+            train_step, make_state, batch_at, mgr, ckpt_every=5,
+            abstract_state=jax.eval_shape(make_state),
+            fault_injector=FaultInjector(fail_at))
+        return loop.run(20)
+
+    # faults at 7 and 13 re-run steps 6-7 and 11-13 after restoring the
+    # step-5 / step-10 checkpoints — exactly the duplicate-prone window
+    res_f = run((7, 13), str(tmp_path / "a"))
+    res_c = run((), str(tmp_path / "b"))
+    steps_f = [m["step"] for m in res_f.metrics_history]
+    assert steps_f == list(range(1, 21)), "history has duplicate/missing steps"
+    assert res_f.metrics_history == res_c.metrics_history
+
+
 def test_data_pipeline_deterministic_and_restart_exact():
     from repro.configs import get_config
     cfg = get_config("gemma-2b", smoke=True)

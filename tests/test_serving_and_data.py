@@ -31,6 +31,43 @@ def test_serve_engine_waves_and_greedy_determinism():
     np.testing.assert_array_equal(r[0].tokens, r[1].tokens)
 
 
+def test_serve_engine_length_aware_wave_packing():
+    """Regression: the old packer popped `max_batch` requests BEFORE the
+    `total <= max_len` assert, so one oversized request crashed `run_all`
+    with an AssertionError and took every other request in its wave down
+    with it.  Now an unfittable request gets a per-request error Result and
+    requests that fit alone but not together split across waves."""
+    cfg = get_config("gemma-2b", smoke=True)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(1)
+
+    # (a) single unfittable request -> error Result, neighbors unharmed
+    engine = ServeEngine(cfg, params, max_batch=4, max_len=32)
+    ok_prompt = rng.integers(1, cfg.vocab, 4).astype(np.int32)
+    big_prompt = rng.integers(1, cfg.vocab, 30).astype(np.int32)
+    engine.submit(Request(uid=0, prompt=ok_prompt, max_new_tokens=4))
+    engine.submit(Request(uid=1, prompt=big_prompt, max_new_tokens=8))
+    engine.submit(Request(uid=2, prompt=ok_prompt, max_new_tokens=4))
+    results = {r.uid: r for r in engine.run_all()}
+    assert results[1].error is not None and "max_len" in results[1].error
+    assert len(results[1].tokens) == 0
+    for uid in (0, 2):
+        assert results[uid].error is None
+        assert len(results[uid].tokens) == 4
+
+    # (b) requests that fit alone but not together split into two waves
+    e2 = ServeEngine(cfg, params, max_batch=4, max_len=32)
+    e2.submit(Request(uid=0, prompt=rng.integers(1, cfg.vocab, 24)
+                      .astype(np.int32), max_new_tokens=8))
+    e2.submit(Request(uid=1, prompt=rng.integers(1, cfg.vocab, 4)
+                      .astype(np.int32), max_new_tokens=20))
+    first = e2.run_wave()
+    assert [r.uid for r in first] == [0] and e2.queue  # uid 1 deferred
+    second = e2.run_wave()
+    assert [r.uid for r in second] == [1]
+    assert all(r.error is None for r in first + second)
+
+
 def test_serve_engine_eos_early_stop():
     cfg = get_config("gemma-2b", smoke=True)
     params = init_params(cfg, jax.random.PRNGKey(0))
