@@ -38,6 +38,14 @@ REQUIRED_KEYS = {
     # unique row set dispatched (throughput/speedup stay "_" sidecars)
     "service": ("clients", "queries_per_client", "parity_ok",
                 "repeat_cached_ok", "unique_rows"),
+    # v7: the measured kernel-autotune pass must prove its contract every
+    # run — every lowered config matches the golden oracle, the tuned
+    # config is legal, the deterministic config count holds, and predicted
+    # runtime ranks measured wall-clock positively per kernel kind (raw
+    # correlations/timings stay machine-dependent "measured" columns)
+    "autotune": ("parity_ok", "tuned_legal_ok", "configs_measured",
+                 "rank_corr_positive_matmul", "rank_corr_positive_attention",
+                 "rank_corr_positive_mamba"),
 }
 
 

@@ -16,6 +16,13 @@ from .flexion import FlexionReport, compute_flexion, model_flexion
 from .flexion_batched import (clear_flexion_reference_cache,
                               flexion_cache_stats, flexion_campaign,
                               model_flexion_campaign)
+from .kernel_bridge import (KernelConfig, KernelWorkload, MeasuredRunner,
+                            TuneResult, attention_workload,
+                            bridge_tile_feasible, config_legal,
+                            lower_genome, lower_mapping, mamba_workload,
+                            matmul_workload, parity_check,
+                            predicted_runtime, rank_correlation_study,
+                            spearman, tune_kernel)
 from .mapper import (GAConfig, MapperResult, ModelResult,
                      assemble_model_result, evaluate_fixed_genome,
                      evaluate_fixed_genome_many, plan_model_rows,
@@ -43,6 +50,11 @@ __all__ = [
     "warmup_engine", "FlexionReport", "compute_flexion", "model_flexion",
     "clear_flexion_reference_cache", "flexion_cache_stats",
     "flexion_campaign", "model_flexion_campaign", "ResultCache",
+    "KernelConfig", "KernelWorkload", "MeasuredRunner", "TuneResult",
+    "attention_workload", "bridge_tile_feasible", "config_legal",
+    "lower_genome", "lower_mapping", "mamba_workload", "matmul_workload",
+    "parity_check", "predicted_runtime", "rank_correlation_study",
+    "spearman", "tune_kernel",
     "GAConfig", "MapperResult", "ModelResult", "assemble_model_result",
     "evaluate_fixed_genome",
     "evaluate_fixed_genome_many", "plan_model_rows", "raw_tile_feasibility",

@@ -218,6 +218,25 @@ def apply_mutation(g, d: GenDraws, tile_lo, tile_hi, table_lens, xp=np):
                         tile_lo, tile_hi, table_lens, xp)
 
 
+def next_population(pop, order_idx, d: GenDraws, tile_lo, tile_hi,
+                    table_lens, n_elite: int, xp=np):
+    """One serial-engine breeding step: elites survive, children are bred
+    from rank-selected parents (crossover -> clip -> mutate).
+
+    ``d`` must be one generation's draws (already ``gen_slice``\\ d).  This is
+    THE host-side generation step — ``mapper._search_serial`` and the
+    measured-objective kernel tuner (``kernel_bridge.tune_kernel``) both call
+    it, so a modeled and a measured GA walking the same draw stream breed
+    bit-identical genomes whenever their objectives rank populations the
+    same way."""
+    elites = pop[order_idx[:n_elite]]
+    parents = pop[order_idx[d.ranks]]          # rank-based selection
+    children = apply_crossover(parents, d, xp)
+    children = clip_genomes(children, tile_lo, tile_hi, table_lens, xp)
+    children = apply_mutation(children, d, tile_lo, tile_hi, table_lens, xp)
+    return xp.concatenate([elites, children], axis=0)
+
+
 def single_generation_draws(rng: np.random.Generator, space, cfg,
                             n: int) -> GenDraws:
     """One generation of draws for ``n`` genomes (standalone operator use,

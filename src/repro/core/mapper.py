@@ -210,15 +210,10 @@ def _search_serial(layer: Layer, spec: FlexSpec, cfg: GAConfig
             best_idx_res = (res, int(order_idx[0]))
         best_hist.append(best_obj)
 
-        d = ga_ops.gen_slice(draws, gen)
-        elites = pop[order_idx[:n_elite]]
-        parents = pop[order_idx[d.ranks]]      # rank-based selection
-        children = ga_ops.apply_crossover(parents, d, np)
-        children = ga_ops.clip_genomes(children, space.tile_lo,
-                                       space.tile_hi, lens, np)
-        children = ga_ops.apply_mutation(children, d, space.tile_lo,
-                                         space.tile_hi, lens, np)
-        pop = np.concatenate([elites, children], axis=0)
+        pop = ga_ops.next_population(pop, order_idx,
+                                     ga_ops.gen_slice(draws, gen),
+                                     space.tile_lo, space.tile_hi, lens,
+                                     n_elite, np)
 
     assert best_g is not None and best_idx_res is not None
     res, i = best_idx_res

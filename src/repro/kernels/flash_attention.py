@@ -94,6 +94,14 @@ def flash_attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray, *,
     )(q, k, v)
 
 
+def vmem_bytes(bq: int, bkv: int, d: int, dtype_bytes: float = 2) -> float:
+    """VMEM working set of one flash grid step: Q/K/V operand blocks at the
+    R-selected width plus the fp32 running-max/sum/accumulator scratch."""
+    operands = (bq * d + 2 * bkv * d) * dtype_bytes
+    scratch = (2 * bq + bq * d) * 4                 # m, l, acc (fp32)
+    return operands + bq * d * 4 + scratch          # + fp32 output block
+
+
 def flash_attention_bshd(q, k, v, *, causal=True, bq=256, bkv=256,
                          interpret=False):
     """(B, S, H, d) GQA layout convenience wrapper."""

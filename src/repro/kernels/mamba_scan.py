@@ -45,6 +45,16 @@ def _scan_kernel(x_ref, dt_ref, b_ref, c_ref, a_ref, d_ref, y_ref, h_ref, *,
     h_ref[...] = jax.lax.fori_loop(0, chunk, step, h_ref[...])
 
 
+def vmem_bytes(chunk: int, d_block: int, n: int,
+               dtype_bytes: float = 4) -> float:
+    """VMEM working set of one scan grid step: x/dt/b/c/y chunk blocks and
+    the A/D parameter blocks at the operand width, plus the fp32 recurrent
+    state scratch (d_block, N)."""
+    operands = (3 * chunk * d_block + 2 * chunk * n
+                + d_block * n + d_block) * dtype_bytes
+    return operands + d_block * n * 4               # h scratch (fp32)
+
+
 def mamba_scan(x: jnp.ndarray, dt: jnp.ndarray, b: jnp.ndarray,
                c: jnp.ndarray, a_log_neg: jnp.ndarray, d_skip: jnp.ndarray,
                *, chunk: int = 128, d_block: int = 512,

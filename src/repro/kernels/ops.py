@@ -12,7 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import dtype_for_bits, ref
 from .flash_attention import flash_attention as _flash
 from .flash_attention import flash_attention_bshd as _flash_bshd
 from .mamba_scan import mamba_scan as _mamba
@@ -23,9 +23,22 @@ def _interpret() -> bool:
     return jax.default_backend() != "tpu"
 
 
+def _cast(arrays, bits, kind):
+    """R-axis width threading: ``bits`` (a mapper ``Mapping.repr_bits``)
+    selects the executed kernel dtype; ``None`` keeps the caller's dtypes.
+    Static under jit, so each width compiles its own program."""
+    if bits is None:
+        return arrays
+    dt = dtype_for_bits(bits, kind)
+    return tuple(a.astype(dt) for a in arrays)
+
+
 @functools.partial(jax.jit,
-                   static_argnames=("bm", "bn", "bk", "order", "use_pallas"))
-def matmul(x, y, *, bm=128, bn=128, bk=128, order="out", use_pallas=True):
+                   static_argnames=("bm", "bn", "bk", "order", "bits",
+                                    "use_pallas"))
+def matmul(x, y, *, bm=128, bn=128, bk=128, order="out", bits=None,
+           use_pallas=True):
+    x, y = _cast((x, y), bits, "matmul")
     if not use_pallas:
         return ref.matmul_ref(x, y)
     return _matmul(x, y, bm=bm, bn=bn, bk=bk, order=order,
@@ -33,8 +46,11 @@ def matmul(x, y, *, bm=128, bn=128, bk=128, order="out", use_pallas=True):
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("causal", "bq", "bkv", "use_pallas"))
-def attention(q, k, v, *, causal=True, bq=256, bkv=256, use_pallas=True):
+                   static_argnames=("causal", "bq", "bkv", "bits",
+                                    "use_pallas"))
+def attention(q, k, v, *, causal=True, bq=256, bkv=256, bits=None,
+              use_pallas=True):
+    q, k, v = _cast((q, k, v), bits, "attention")
     if not use_pallas:
         return ref.attention_ref(q, k, v, causal=causal)
     return _flash(q, k, v, causal=causal, bq=bq, bkv=bkv,
@@ -60,9 +76,10 @@ def attention_bshd(q, k, v, *, causal=True, bq=256, bkv=256,
 
 
 @functools.partial(jax.jit,
-                   static_argnames=("chunk", "d_block", "use_pallas"))
+                   static_argnames=("chunk", "d_block", "bits", "use_pallas"))
 def mamba_scan(x, dt, b, c, a_log_neg, d_skip, *, chunk=128, d_block=512,
-               use_pallas=True):
+               bits=None, use_pallas=True):
+    x, dt, b, c = _cast((x, dt, b, c), bits, "mamba")
     if not use_pallas:
         return ref.mamba_scan_ref(x, dt, b, c, a_log_neg, d_skip)
     return _mamba(x, dt, b, c, a_log_neg, d_skip, chunk=chunk,

@@ -106,6 +106,10 @@ def tiled_matmul(x: jnp.ndarray, y: jnp.ndarray, *,
     raise ValueError(f"unknown order {order!r}")
 
 
-def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 2) -> int:
-    """VMEM working set of one grid step (the kernel-level T constraint)."""
+def vmem_bytes(bm: int, bn: int, bk: int, dtype_bytes: float = 2) -> float:
+    """VMEM working set of one grid step (the kernel-level T constraint).
+
+    ``dtype_bytes`` is the operand width the mapper's R gene selects
+    (``precision.bytes_of`` — may be fractional for sub-byte widths); the
+    accumulator and output block are always fp32-resident."""
     return (bm * bk + bk * bn) * dtype_bytes + bm * bn * 4  # fp32 acc

@@ -12,6 +12,10 @@ RNG = np.random.default_rng(0)
 
 
 def rand(shape, dtype):
+    if dtype == jnp.int8:
+        # integer-valued in {-1, 0, 1}: int8 products/sums stay exact, so
+        # the quantized R-axis path is checked bit-for-bit vs the oracle
+        return jnp.asarray(RNG.integers(-1, 2, shape), jnp.int8)
     x = RNG.normal(size=shape).astype(np.float32)
     return jnp.asarray(x, dtype)
 
@@ -23,12 +27,13 @@ def rand(shape, dtype):
     (64, 64, 256, 32, 32, 128),
     (128, 256, 128, 128, 128, 128),
 ])
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int8])
 def test_tiled_matmul_sweep(order, m, n, k, bm, bn, bk, dtype):
     x, y = rand((m, k), dtype), rand((k, n), dtype)
     got = ops.matmul(x, y, bm=bm, bn=bn, bk=bk, order=order)
     gold = ref.matmul_ref(x, y)
-    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    tol = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2,
+           jnp.int8: 0.0}[dtype]
     np.testing.assert_allclose(np.asarray(got, np.float32),
                                np.asarray(gold, np.float32),
                                rtol=tol, atol=tol * 8)
@@ -88,6 +93,49 @@ def test_vmem_budget_helper():
     # the T-axis legality check: a 128^3 bf16 block set fits 16MB VMEM
     assert vmem_bytes(128, 128, 128, 2) < 16 * 2 ** 20
     assert vmem_bytes(2048, 2048, 2048, 2) > 16 * 2 ** 20
+
+
+def test_vmem_budget_tracks_r_axis_width():
+    """The R gene's width reaches the VMEM working set: operand bytes scale
+    with bytes_of(bits) (sub-byte widths pack fractionally), fp32
+    accumulator cost is width-independent."""
+    from repro.core.precision import bytes_of
+    from repro.kernels.flash_attention import vmem_bytes as att_vmem
+    from repro.kernels.mamba_scan import vmem_bytes as scan_vmem
+
+    ws = [vmem_bytes(128, 128, 128, bytes_of(b)) for b in (4, 8, 16, 32)]
+    assert ws == sorted(ws) and len(set(ws)) == len(ws)
+    # operand term halves from bf16 -> int8; the fp32 acc term does not
+    acc = 128 * 128 * 4
+    assert (vmem_bytes(128, 128, 128, 2) - acc) == \
+        2 * (vmem_bytes(128, 128, 128, 1) - acc)
+    assert att_vmem(128, 128, 64, 2) < 16 * 2 ** 20
+    assert scan_vmem(128, 512, 16, 4) < 16 * 2 ** 20
+    assert att_vmem(64, 64, 32, 4) > att_vmem(64, 64, 32, 2)
+    assert scan_vmem(64, 64, 16, 4) > scan_vmem(64, 64, 16, 2)
+
+
+def test_ops_bits_threading():
+    """ops entry points execute at the R-selected width: bits chooses the
+    kernel dtype (and floors at each kernel's narrowest supported width)."""
+    x, y = rand((64, 64), jnp.float32), rand((64, 64), jnp.float32)
+    assert ops.matmul(x, y, bm=32, bn=32, bk=32, bits=8).dtype == jnp.int8
+    assert ops.matmul(x, y, bm=32, bn=32, bk=32,
+                      bits=16).dtype == jnp.bfloat16
+    assert ops.matmul(x, y, bm=32, bn=32, bk=32, bits=None).dtype == \
+        jnp.float32
+    q, k, v = (rand((2, 64, 32), jnp.float32) for _ in range(3))
+    assert ops.attention(q, k, v, bq=32, bkv=32,
+                         bits=8).dtype == jnp.bfloat16   # floor: bf16
+    xm = rand((1, 32, 16), jnp.float32)
+    dt = jnp.asarray(RNG.uniform(0.001, 0.1, (1, 32, 16)), jnp.float32)
+    bm_ = rand((1, 32, 8), jnp.float32)
+    cm = rand((1, 32, 8), jnp.float32)
+    a_log = -jnp.asarray(RNG.uniform(0.5, 2.0, (16, 8)), jnp.float32)
+    d_skip = jnp.ones((16,), jnp.float32)
+    out = ops.mamba_scan(xm, dt, bm_, cm, a_log, d_skip, chunk=8,
+                         d_block=8, bits=8)              # floor: f32
+    assert out.dtype == jnp.float32
 
 
 def test_kernel_matches_model_flash_path():
