@@ -1,11 +1,11 @@
 """Shared benchmark helpers: budgets, layer lookup, CSV emission."""
 from __future__ import annotations
 
-import os
 import time
 from typing import Dict, List, Optional
 
 from repro.core import GAConfig, Layer, get_model
+from repro.core.envvars import get_env
 
 # Budgets: FAST (tests / CI smoke), DEFAULT (bench runs), FULL (paper 100x100)
 BUDGETS = {
@@ -18,14 +18,14 @@ BUDGETS = {
 def bench_mode() -> str:
     """Current REPRO_BENCH_MODE — read lazily (per call, not at import) so
     tests and multi-pass runners can flip the env between runs."""
-    return os.environ.get("REPRO_BENCH_MODE", "default")
+    return get_env("REPRO_BENCH_MODE", "default")
 
 
 def campaign_mode() -> bool:
     """True when REPRO_CAMPAIGN is set: benches with a cross-model campaign
     path (fig7, fig13) batch their whole sweep into one engine row set —
     ``benchmarks.run --campaign`` runs a pass with this on."""
-    return os.environ.get("REPRO_CAMPAIGN", "") not in ("", "0")
+    return get_env("REPRO_CAMPAIGN", "") not in ("", "0")
 
 
 def ga_budget(scale: float = 1.0) -> GAConfig:
@@ -42,7 +42,7 @@ def ga_budget(scale: float = 1.0) -> GAConfig:
     raises instead of mislabeling."""
     import dataclasses
     base = BUDGETS[bench_mode()]
-    engine = os.environ.get("REPRO_ENGINE")
+    engine = get_env("REPRO_ENGINE")
     if engine:
         base = dataclasses.replace(base, engine=engine)
     if campaign_mode():

@@ -19,14 +19,29 @@ import json
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parents[1]))
+_REPO = Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(_REPO))
+sys.path.insert(0, str(_REPO / "src"))
 
 from benchmarks._compare import public_derived, value_match  # noqa: E402
 
 # schema contract (v5+): metrics every fresh artifact must carry per bench
 # (a regression that silently drops the fifth-axis sweep, the W-F columns,
-# or the v6 service gates fails here even when the anchor predates them)
+# or the v6 service gates fails here even when the anchor predates them).
+# Every PARITY_BENCHES member in benchmarks/run.py must have an entry — the
+# REP006 lint rule and `--self-check` enforce the coverage, so a parity
+# bench's headline metrics cannot silently drop out of a fresh artifact.
 REQUIRED_KEYS = {
+    "fig7": ("fullflex1000_speedup", "partflex1000_speedup",
+             "ordering_ok"),
+    "fig8": ("speedup_1k_to_64k",),
+    "fig9": ("fullflex0100_speedup",),
+    "fig10": ("fullflex_speedup_16x64", "ordering_ok_16x64",
+              "fullflex_speedup_32x32", "ordering_ok_32x32"),
+    "fig11": ("fullflex_speedup", "partflexB_close_to_full"),
+    "fig12": ("speedup_256_to_1024", "speedup_1024_to_4096"),
+    "flexion": ("partflex1000_hf_T", "fullflex1111_hf",
+                "campaign_matches_serial", "all_in_unit_interval"),
     "fig13": ("fullflex1111_geomean_future", "fullflex1111_hf",
               "partflex1111_hf", "fullflex11111_geomean_future",
               "fullflex11111_hf", "fullflex1111_wf", "fullflex11111_wf",
@@ -84,13 +99,52 @@ def diff(new: dict, anchor: dict, rtol: float = 0.0):
                     yield engine, bench, key, a, b
 
 
+def self_check() -> int:
+    """The REP006 schema-coverage check, standalone: every parity bench in
+    benchmarks/run.py must have a non-empty REQUIRED_KEYS entry.  Parses
+    run.py with ``ast`` (no jax import) and reuses the linter's check."""
+    import ast
+
+    from repro.analysis.rules import parity_coverage_gaps
+
+    run_py = _REPO / "benchmarks" / "run.py"
+    parity = None
+    for stmt in ast.parse(run_py.read_text()).body:
+        if (isinstance(stmt, ast.Assign) and len(stmt.targets) == 1
+                and isinstance(stmt.targets[0], ast.Name)
+                and stmt.targets[0].id == "PARITY_BENCHES"):
+            parity = ast.literal_eval(stmt.value)
+    if parity is None:
+        print("error: PARITY_BENCHES not found in benchmarks/run.py",
+              file=sys.stderr)
+        return 2
+    gaps = parity_coverage_gaps(parity, REQUIRED_KEYS)
+    for bench in gaps:
+        print(f"GAP: parity bench {bench!r} has no REQUIRED_KEYS entry",
+              file=sys.stderr)
+    if gaps:
+        print(f"{len(gaps)} parity bench(es) uncovered", file=sys.stderr)
+        return 1
+    print(f"OK: all {len(parity)} parity benches have REQUIRED_KEYS "
+          f"coverage")
+    return 0
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
-    ap.add_argument("new", help="freshly generated BENCH JSON")
-    ap.add_argument("anchor", help="committed anchor BENCH JSON")
+    ap.add_argument("new", nargs="?", help="freshly generated BENCH JSON")
+    ap.add_argument("anchor", nargs="?", help="committed anchor BENCH JSON")
     ap.add_argument("--rtol", type=float, default=0.0,
                     help="relative float tolerance (default: bit-identical)")
+    ap.add_argument("--self-check", action="store_true",
+                    help="verify PARITY_BENCHES<->REQUIRED_KEYS coverage "
+                         "(no artifacts needed) and exit")
     args = ap.parse_args(argv)
+    if args.self_check:
+        return self_check()
+    if args.new is None or args.anchor is None:
+        ap.error("new and anchor BENCH JSON paths are required "
+                 "(or pass --self-check)")
     with open(args.new) as f:
         new = json.load(f)
     with open(args.anchor) as f:

@@ -1,0 +1,56 @@
+"""repro.analysis — an AST-based invariant linter for this repo.
+
+The repo's correctness story rests on disciplines that no generic linter
+knows about: serial<->batched<->campaign bit-parity, the R-pinned "trace the
+exact pre-R XLA program" rule, byte-identical host RNG draw streams, and
+thread-safe shared caches under the DSE service dispatcher.  This package
+encodes them as mechanical AST rules (REP001–REP006, catalogued in
+docs/analysis.md) with per-line suppressions and a CLI wired into tier-1
+(tests/test_lint_clean.py) and CI.
+
+Usage::
+
+    python -m repro.analysis               # text report, exit 1 on findings
+    python -m repro.analysis --format json # CI artifact
+    repro-lint --list-rules                # rule catalogue
+
+Suppression (justification mandatory)::
+
+    thing()  # repro: disable=REP003 -- audited: single-threaded setup path
+"""
+from __future__ import annotations
+
+import dataclasses
+from pathlib import Path
+from typing import List, Optional, Sequence
+
+from .registry import Finding, Rule, all_rules, run_rules
+from .walker import Project
+from . import rules as _rules  # noqa: F401  (importing registers REP rules)
+
+__all__ = ["Finding", "Rule", "Project", "all_rules", "analyze",
+           "find_root"]
+
+
+def find_root(start: Optional[Path] = None) -> Path:
+    """Nearest ancestor of ``start`` (default cwd) with a pyproject.toml —
+    the repo root all scan paths and finding paths are relative to."""
+    cur = (start or Path.cwd()).resolve()
+    for cand in [cur, *cur.parents]:
+        if (cand / "pyproject.toml").is_file():
+            return cand
+    return cur
+
+
+def analyze(project: Project,
+            select: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Run the rules and mark findings silenced by a same-line
+    ``# repro: disable=REPxxx`` directive as suppressed."""
+    out: List[Finding] = []
+    for f in run_rules(project, select):
+        sf = project.by_rel(f.path)
+        d = sf.directives.get(f.line) if sf else None
+        if d is not None and d.silences(f.code):
+            f = dataclasses.replace(f, suppressed=True)
+        out.append(f)
+    return out

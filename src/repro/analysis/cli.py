@@ -1,0 +1,53 @@
+"""``python -m repro.analysis`` / ``repro-lint`` — run the invariant rules.
+
+Exit codes: 0 clean (suppressed findings allowed), 1 unsuppressed findings,
+2 usage error (argparse).  CI runs ``--format json`` so the artifact is
+machine-diffable; humans get ``path:line: REPxxx message`` text.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from pathlib import Path
+
+from . import analyze, find_root
+from .registry import all_rules
+from .report import render_json, render_text, split
+from .walker import Project
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="repro-lint", description=__doc__.splitlines()[0])
+    ap.add_argument("paths", nargs="*",
+                    help="files/dirs to scan, relative to the repo root "
+                         "(default: src/repro benchmarks scripts examples)")
+    ap.add_argument("--root", type=Path, default=None,
+                    help="repo root (default: walk up from cwd to "
+                         "pyproject.toml)")
+    ap.add_argument("--format", choices=("text", "json"), default="text")
+    ap.add_argument("--select", default=None, metavar="REPxxx[,REPxxx...]",
+                    help="run only these rule codes")
+    ap.add_argument("--list-rules", action="store_true",
+                    help="print the rule catalogue and exit")
+    args = ap.parse_args(argv)
+
+    if args.list_rules:
+        for r in all_rules():
+            print(f"{r.code} {r.name}: {r.summary}")
+        return 0
+
+    root = (args.root or find_root()).resolve()
+    select = ([c.strip() for c in args.select.split(",") if c.strip()]
+              if args.select else None)
+    project = Project.load(root, args.paths or None)
+    findings = analyze(project, select=select)
+
+    render = render_json if args.format == "json" else render_text
+    print(render(findings, len(project.files)))
+    active, _ = split(findings)
+    return 1 if active else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,43 @@
+"""Rendering for linter results — text for humans, JSON for CI."""
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import List
+
+from .registry import Finding
+
+
+def split(findings: List[Finding]):
+    active = [f for f in findings if not f.suppressed]
+    muted = [f for f in findings if f.suppressed]
+    return active, muted
+
+
+def render_text(findings: List[Finding], files_scanned: int) -> str:
+    active, muted = split(findings)
+    lines = [f.render() for f in findings]
+    if active:
+        counts = Counter(f.code for f in active)
+        by_code = ", ".join(f"{c}:{n}" for c, n in sorted(counts.items()))
+        lines.append(f"{len(active)} finding(s) [{by_code}] "
+                     f"({len(muted)} suppressed) across "
+                     f"{files_scanned} files")
+    else:
+        lines.append(f"clean: 0 findings ({len(muted)} suppressed) "
+                     f"across {files_scanned} files")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding], files_scanned: int) -> str:
+    active, muted = split(findings)
+    doc = {
+        "version": 1,
+        "files_scanned": files_scanned,
+        "findings": [f.as_dict() for f in findings],
+        "unsuppressed": len(active),
+        "suppressed": len(muted),
+        "counts": dict(sorted(Counter(f.code for f in active).items())),
+        "ok": not active,
+    }
+    return json.dumps(doc, indent=2, sort_keys=True)

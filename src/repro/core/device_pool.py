@@ -16,9 +16,9 @@ and single-device campaigns are bit-identical (tests/test_device_pool.py).
 """
 from __future__ import annotations
 
-import os
 from typing import Optional
 
+from repro.core.envvars import get_env
 from repro.dist.pool import DevicePool
 
 
@@ -27,7 +27,7 @@ def pool_for(cfg=None) -> Optional[DevicePool]:
     ``None`` when neither asks for one (keep default placement)."""
     spec = getattr(cfg, "devices", None) if cfg is not None else None
     if spec is None:
-        spec = os.environ.get("REPRO_DEVICES") or None
+        spec = get_env("REPRO_DEVICES") or None
     if spec is None:
         return None
     return DevicePool.from_spec(spec)

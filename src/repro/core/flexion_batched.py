@@ -37,13 +37,13 @@ caveat as the engine's GPU/TPU follow-up in docs/mapper.md.
 from __future__ import annotations
 
 import functools
-import os
 import threading
 from functools import lru_cache
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from .envvars import get_env
 from .result_cache import ResultCache
 from .spec import (FULLFLEX, FlexSpec, HWConfig, INFLEX, PARTFLEX,
                    RepresentationSpec)
@@ -163,7 +163,7 @@ def _default_reference(spec: FlexSpec) -> FlexSpec:
 
 
 def _backend() -> str:
-    forced = os.environ.get("REPRO_FLEXION_BACKEND", "")
+    forced = get_env("REPRO_FLEXION_BACKEND", "")
     if forced in ("numpy", "jax"):
         return forced
     try:
@@ -214,16 +214,19 @@ def _pair_fractions(t, stride, depthwise, buf, xp):
 
 
 _JAX_EVAL = None
+_JAX_EVAL_LOCK = threading.Lock()
 _JOB_BUCKET = 8     # jax path pads the job axis so campaign sizes share jits
 
 
 def _jax_eval():
     global _JAX_EVAL
     if _JAX_EVAL is None:
-        import jax
-        import jax.numpy as jnp
-        _JAX_EVAL = jax.jit(
-            lambda t, s, d, b: _pair_fractions(t, s, d, b, jnp))
+        with _JAX_EVAL_LOCK:
+            if _JAX_EVAL is None:
+                import jax
+                import jax.numpy as jnp
+                _JAX_EVAL = jax.jit(
+                    lambda t, s, d, b: _pair_fractions(t, s, d, b, jnp))
     return _JAX_EVAL
 
 

@@ -36,7 +36,6 @@ lazily inside the functions that execute or size them, so importing
 from __future__ import annotations
 
 import dataclasses
-import os
 import time
 from typing import Callable, Dict, List, NamedTuple, Optional, Tuple
 
@@ -44,6 +43,7 @@ import numpy as np
 
 from .. import kernels as _k
 from . import ga_ops
+from .envvars import get_env
 from .mapper import GAConfig
 from .mapspace import Mapping, MapSpace, mapspace_for
 from .precision import bytes_of
@@ -408,7 +408,7 @@ class MeasuredRunner:
     def available(self) -> bool:
         if self.force_available is not None:
             return bool(self.force_available)
-        if os.environ.get("REPRO_NO_PALLAS"):
+        if get_env("REPRO_NO_PALLAS"):
             return False
         try:
             from ..kernels import ops  # noqa: F401

@@ -31,6 +31,7 @@ indistinguishable from a recomputed one).
 """
 from __future__ import annotations
 
+import os
 import pickle
 import threading
 from collections import OrderedDict
@@ -158,11 +159,25 @@ class ResultCache:
 
     def save(self, path: str) -> int:
         """Pickle the entries (not the counters) to ``path``; returns the
-        entry count — a warm restart for a long-lived service."""
+        entry count — a warm restart for a long-lived service.
+
+        The write is atomic (temp file in the same directory, then
+        ``os.replace``): a crash mid-save — a killed service, a full disk —
+        leaves the previous complete snapshot in place instead of a
+        truncated pickle that poisons the next service start."""
         with self._lock:
             items = list(self._data.items())
-        with open(path, "wb") as f:
-            pickle.dump(items, f)
+        tmp = f"{path}.tmp.{os.getpid()}"
+        try:
+            with open(tmp, "wb") as f:
+                pickle.dump(items, f)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+            raise
         return len(items)
 
     def load(self, path: str) -> int:

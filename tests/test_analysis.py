@@ -1,0 +1,429 @@
+"""repro.analysis: every rule fires on a minimal reproduction of the
+historical bug it encodes and stays quiet on the compliant pattern;
+suppression parsing, JSON output shape, CLI exit codes, and the generated
+env-var docs table are pinned here too."""
+import json
+import textwrap
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import Project, all_rules, analyze
+from repro.analysis.cli import main as cli_main
+from repro.analysis.suppressions import scan
+from repro.core import envvars
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _project(tmp_path, files, **kw):
+    """Build a Project over synthetic sources with every rule scope
+    widened (scope_all) so fixtures need not replicate the repo layout."""
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    kw.setdefault("scope_all", True)
+    kw.setdefault("registered_env", set())
+    return Project.load(tmp_path, sorted(files), **kw)
+
+
+def _codes(findings):
+    return [f.code for f in findings if not f.suppressed]
+
+
+# -- REP001: parity purity (PR 6 `* bscale` FMA-refusion ULP hazard) -------
+
+def test_rep001_fires_on_unguarded_repr_arithmetic(tmp_path):
+    # the PR 6 hazard: an unconditional scale op in the traced cost graph
+    # (even * 1.0 refuses FMAs) shifts R-pinned rows off the pre-R program
+    p = _project(tmp_path, {"m.py": """\
+        import jax
+        import functools
+
+        @functools.partial(jax.jit, static_argnames=("hw",))
+        def cost(x, repr_bits, hw):
+            bscale = repr_bits / 32.0
+            return x * bscale
+    """})
+    assert "REP001" in _codes(analyze(p, select=["REP001"]))
+
+
+def test_rep001_quiet_with_static_split(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        def cost(x, repr_bits):
+            if repr_bits is None:
+                bscale = 1.0
+            else:
+                bscale = repr_bits / 32.0
+            return x * bscale
+    """})
+    assert _codes(analyze(p, select=["REP001"])) == []
+
+
+def test_rep001_quiet_under_with_repr_guard(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        def decode(pop, reprs, with_repr):
+            if with_repr:
+                bits = reprs[0]
+            else:
+                bits = None
+            return bits
+    """})
+    assert _codes(analyze(p, select=["REP001"])) == []
+
+
+# -- REP002: RNG discipline (byte-identical host draw streams) -------------
+
+def test_rep002_fires_on_legacy_global_draw(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def mutate(pop):
+            return pop + np.random.rand(*pop.shape)
+    """})
+    assert "REP002" in _codes(analyze(p, select=["REP002"]))
+
+
+def test_rep002_fires_on_unseeded_default_rng(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def draws():
+            return np.random.default_rng().integers(0, 10, 4)
+    """})
+    assert "REP002" in _codes(analyze(p, select=["REP002"]))
+
+
+def test_rep002_fires_on_jax_random_in_core(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import jax
+
+        def draw(key):
+            return jax.random.uniform(key, (4,))
+    """})
+    assert "REP002" in _codes(analyze(p, select=["REP002"]))
+
+
+def test_rep002_quiet_on_seeded_generator_stream(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def draws(seed):
+            rng = np.random.default_rng(seed)
+            return rng.integers(0, 10, 4)
+    """})
+    assert _codes(analyze(p, select=["REP002"])) == []
+
+
+# -- REP003: lock discipline (PR 7 dispatcher cache race) ------------------
+
+def test_rep003_fires_on_unlocked_global_memo(tmp_path):
+    # the _JAX_EVAL shape: check-then-set on a module global with no lock
+    p = _project(tmp_path, {"m.py": """\
+        _MEMO = None
+
+        def get():
+            global _MEMO
+            if _MEMO is None:
+                _MEMO = object()
+            return _MEMO
+    """})
+    assert "REP003" in _codes(analyze(p, select=["REP003"]))
+
+
+def test_rep003_quiet_when_rebind_is_locked(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import threading
+
+        _MEMO = None
+        _MEMO_LOCK = threading.Lock()
+
+        def get():
+            global _MEMO
+            with _MEMO_LOCK:
+                if _MEMO is None:
+                    _MEMO = object()
+            return _MEMO
+    """})
+    assert _codes(analyze(p, select=["REP003"])) == []
+
+
+def test_rep003_fires_on_unlocked_container_mutation(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        _CACHE = {}
+
+        def put(k, v):
+            _CACHE[k] = v
+    """})
+    assert "REP003" in _codes(analyze(p, select=["REP003"]))
+
+
+def test_rep003_bare_lru_cache_flagged_only_when_cleared(tmp_path):
+    cleared = _project(tmp_path / "a", {"m.py": """\
+        from functools import lru_cache
+
+        @lru_cache(maxsize=8)
+        def table(n):
+            return n * 2
+
+        def reset():
+            table.cache_clear()
+    """})
+    assert "REP003" in _codes(analyze(cleared, select=["REP003"]))
+
+    never_cleared = _project(tmp_path / "b", {"m.py": """\
+        from functools import lru_cache
+
+        @lru_cache(maxsize=8)
+        def table(n):
+            return n * 2
+    """})
+    assert _codes(analyze(never_cleared, select=["REP003"])) == []
+
+
+# -- REP004: retrace hygiene ----------------------------------------------
+
+def test_rep004_fires_on_dead_static_argname(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("hw",))
+        def f(x, n):
+            return x * n
+    """})
+    assert "REP004" in _codes(analyze(p, select=["REP004"]))
+
+
+def test_rep004_fires_on_unhashable_static_default(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("opts",))
+        def f(x, opts=[]):
+            return x
+    """})
+    assert "REP004" in _codes(analyze(p, select=["REP004"]))
+
+
+def test_rep004_shape_dependent_arg_flagged_unless_static(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import functools
+        import jax
+
+        @functools.partial(jax.jit, static_argnames=("n",))
+        def f(x, m, *, n=1):
+            return x
+
+        def call(x):
+            return f(x, len(x), n=len(x))
+    """})
+    found = [f for f in analyze(p, select=["REP004"]) if not f.suppressed]
+    # positional len(x) into the traced slot fires; n=len(x) is declared
+    # static — that IS the compliant mechanism — and must stay quiet
+    assert len(found) == 1
+    assert "len(...)" in found[0].message
+
+
+def test_rep004_quiet_on_bucketed_int_wrap(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import functools
+        import jax
+        import numpy as np
+
+        @functools.partial(jax.jit, static_argnames=("hw",))
+        def f(x, gens, *, hw=None):
+            return x * gens
+
+        def call(x, c):
+            return f(x, np.int32(c.gens), hw=c.hw)
+    """})
+    assert _codes(analyze(p, select=["REP004"])) == []
+
+
+# -- REP005: xp-genericity -------------------------------------------------
+
+def test_rep005_fires_on_literal_np_in_xp_operator(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def mutate(pop, rate, xp=np):
+            return np.where(pop > rate, pop, 0)
+    """})
+    assert "REP005" in _codes(analyze(p, select=["REP005"]))
+
+
+def test_rep005_quiet_on_xp_calls_and_np_default(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def mutate(pop, rate, xp=np):
+            return xp.where(pop > rate, pop, 0)
+    """})
+    assert _codes(analyze(p, select=["REP005"])) == []
+
+
+# -- REP006: env / schema registry ----------------------------------------
+
+def test_rep006_fires_on_unregistered_env_read(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import os
+
+        def knob():
+            return os.environ.get("REPRO_UNREGISTERED_KNOB", "")
+    """}, registered_env={"REPRO_OTHER"})
+    assert "REP006" in _codes(analyze(p, select=["REP006"]))
+
+
+def test_rep006_tracks_get_env_accessor_reads(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        from repro.core.envvars import get_env
+
+        def knob():
+            return get_env("REPRO_UNREGISTERED_KNOB")
+    """}, registered_env=set())
+    assert "REP006" in _codes(analyze(p, select=["REP006"]))
+
+
+def test_rep006_quiet_on_registered_read(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import os
+
+        def knob():
+            return os.environ.get("REPRO_KNOB", "")
+    """}, registered_env={"REPRO_KNOB"})
+    assert _codes(analyze(p, select=["REP006"])) == []
+
+
+def test_rep006_parity_coverage_gap_fires_and_clears(tmp_path):
+    gap = _project(tmp_path / "a", {
+        "benchmarks/run.py": 'PARITY_BENCHES = {"fig7", "service"}\n',
+        "scripts/diff_bench.py": 'REQUIRED_KEYS = {"fig7": ("a",)}\n',
+    })
+    found = [f for f in analyze(gap, select=["REP006"])
+             if not f.suppressed]
+    assert len(found) == 1 and "service" in found[0].message
+
+    covered = _project(tmp_path / "b", {
+        "benchmarks/run.py": 'PARITY_BENCHES = {"fig7", "service"}\n',
+        "scripts/diff_bench.py":
+            'REQUIRED_KEYS = {"fig7": ("a",), "service": ("b",)}\n',
+    })
+    assert _codes(analyze(covered, select=["REP006"])) == []
+
+
+# -- suppressions ----------------------------------------------------------
+
+def test_directive_parsing_codes_and_justification():
+    d = scan("x = 1  # repro: disable=REP001,REP003 -- audited fixture\n")
+    assert d[1].codes == ("REP001", "REP003")
+    assert d[1].justification == "audited fixture"
+    assert d[1].silences("REP003") and not d[1].silences("REP002")
+
+
+def test_directive_inside_string_literal_is_inert():
+    d = scan('msg = "# repro: disable=REP001 -- not a comment"\n')
+    assert d == {}
+
+
+def test_justified_suppression_mutes_finding(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def f():
+            return np.random.rand(3)  # repro: disable=REP002 -- fixture: exercises the legacy path on purpose
+    """})
+    found = analyze(p, select=["REP000", "REP002"])
+    rep2 = [f for f in found if f.code == "REP002"]
+    assert rep2 and all(f.suppressed for f in rep2)
+    assert not [f for f in found if f.code == "REP000"]
+
+
+def test_unjustified_suppression_is_rep000(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        import numpy as np
+
+        def f():
+            return np.random.rand(3)  # repro: disable=REP002
+    """})
+    codes = _codes(analyze(p, select=["REP000", "REP002"]))
+    assert codes == ["REP000"]          # REP002 muted, hygiene finding live
+
+
+def test_unknown_code_in_directive_is_rep000(tmp_path):
+    p = _project(tmp_path, {"m.py": """\
+        x = 1  # repro: disable=REP999 -- typo'd code
+    """})
+    assert "REP000" in _codes(analyze(p, select=["REP000"]))
+
+
+# -- CLI -------------------------------------------------------------------
+
+def test_cli_exit_zero_and_json_shape_on_clean_tree(tmp_path, capsys):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "clean.py").write_text("def f():\n    return 1\n")
+    rc = cli_main(["--root", str(tmp_path), "--format", "json",
+                   "clean.py"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert doc["ok"] is True and doc["unsuppressed"] == 0
+    assert doc["files_scanned"] == 1
+    assert set(doc) >= {"version", "files_scanned", "findings",
+                        "unsuppressed", "suppressed", "counts", "ok"}
+
+
+def test_cli_exit_one_and_finding_fields_on_dirty_tree(tmp_path, capsys):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "dirty.py").write_text(
+        "import os\nV = os.environ.get('REPRO_NOT_A_REAL_KNOB')\n")
+    rc = cli_main(["--root", str(tmp_path), "--format", "json",
+                   "dirty.py"])
+    doc = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert doc["ok"] is False and doc["unsuppressed"] == 1
+    f = doc["findings"][0]
+    assert set(f) == {"path", "line", "code", "message", "suppressed"}
+    assert f["code"] == "REP006" and f["path"] == "dirty.py"
+
+
+def test_cli_list_rules_covers_all_codes(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for code in ("REP000", "REP001", "REP002", "REP003", "REP004",
+                 "REP005", "REP006"):
+        assert code in out
+    assert len(all_rules()) == 7
+
+
+def test_cli_bad_usage_exits_two():
+    with pytest.raises(SystemExit) as e:
+        cli_main(["--format", "yaml"])
+    assert e.value.code == 2
+
+
+# -- env-var registry / generated docs ------------------------------------
+
+def test_envvars_docs_table_in_sync():
+    """docs/envvars.md is generated from the registry; regenerate with
+    `PYTHONPATH=src python -m repro.core.envvars > docs/envvars.md`."""
+    want = envvars.render_table()
+    got = (REPO / "docs" / "envvars.md").read_text()
+    assert got == want, "docs/envvars.md drifted from envvars.REGISTRY"
+
+
+def test_get_env_rejects_unregistered_names(monkeypatch):
+    monkeypatch.setenv("REPRO_DEVICES", "2")
+    assert envvars.get_env("REPRO_DEVICES") == "2"
+    with pytest.raises(KeyError):
+        envvars.get_env("REPRO_NOT_A_REAL_KNOB")
+
+
+def test_diff_bench_self_check_passes():
+    import importlib.util
+    spec = importlib.util.spec_from_file_location(
+        "diff_bench", REPO / "scripts" / "diff_bench.py")
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    assert mod.main(["--self-check"]) == 0

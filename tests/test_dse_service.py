@@ -233,3 +233,35 @@ def _rows(layers, cfg):
     from repro.core.mapper import plan_model_rows, request_rows
     row_index, _ = plan_model_rows(layers)
     return request_rows(layers, SPEC, cfg, row_index)
+
+
+def test_interrupted_save_leaves_previous_snapshot_intact(tmp_path,
+                                                          monkeypatch):
+    """A crash mid-save (killed service, full disk) must not clobber the
+    previous complete snapshot with a truncated pickle — save writes a
+    temp file and os.replace()s it into place only on success."""
+    import pickle as _pickle
+
+    from repro.core import result_cache as rc_mod
+
+    path = str(tmp_path / "rows.pkl")
+    cache = ResultCache()
+    cache.put("k", 1)
+    assert cache.save(path) == 1
+
+    cache.put("k2", 2)
+
+    def _dump_partial_then_die(items, f):
+        f.write(b"\x80\x04corrupt")          # truncated-pickle prefix
+        raise OSError("disk full mid-save")
+
+    monkeypatch.setattr(rc_mod.pickle, "dump", _dump_partial_then_die)
+    with pytest.raises(OSError):
+        cache.save(path)
+    monkeypatch.setattr(rc_mod.pickle, "dump", _pickle.dump)
+
+    # no temp droppings, and the previous snapshot still loads whole
+    assert sorted(p.name for p in tmp_path.iterdir()) == ["rows.pkl"]
+    fresh = ResultCache()
+    assert fresh.load(path) == 1
+    assert fresh.get("k") == 1

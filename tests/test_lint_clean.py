@@ -1,0 +1,35 @@
+"""Tier-1 gate: the repo is clean under its own invariant linter.
+
+This is the enforcement point for the disciplines docs/analysis.md
+catalogues — parity purity, RNG streams, lock discipline, retrace hygiene,
+xp-genericity, and the env/schema registry.  A change that trips a rule
+either fixes the hazard or adds a justified same-line suppression
+(``# repro: disable=REPxxx -- why``); unjustified suppressions are
+themselves findings (REP000), so the suppression trail stays auditable.
+"""
+from pathlib import Path
+
+from repro.analysis import Project, analyze
+
+REPO = Path(__file__).resolve().parents[1]
+
+
+def _load():
+    return Project.load(REPO)
+
+
+def test_repo_is_lint_clean():
+    findings = analyze(_load())
+    active = [f for f in findings if not f.suppressed]
+    assert not active, (
+        "unsuppressed linter findings (fix, or suppress with a justified "
+        "'# repro: disable=REPxxx -- why'):\n"
+        + "\n".join(f.render() for f in active))
+
+
+def test_every_suppression_in_tree_is_justified():
+    """Belt over REP000's braces: directives must carry '-- why' text."""
+    for sf in _load().files:
+        for d in sf.directives.values():
+            assert d.justification, (
+                f"{sf.rel}:{d.line}: suppression without justification")
