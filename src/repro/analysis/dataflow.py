@@ -1,0 +1,484 @@
+"""Interprocedural value-flow facts for REP008/REP009.
+
+Two small dataflow analyses over the :class:`~.callgraph.CallGraph`, both
+deliberately *syntactic* — they track names and attribute reads, not
+values, which is exactly the precision the two rules need:
+
+* :func:`attr_reads` — which attributes of a parameter are read anywhere
+  on the call paths out of a root function.  REP008 runs it from
+  ``run_batched_ga``'s ``cfg`` to learn which ``GAConfig`` fields the
+  dispatch path actually consumes (transitively: ``ga_ops.n_elite`` reads
+  ``elite_frac`` two calls down), then compares against the fields folded
+  into ``ga_params_key``.
+
+* :class:`ShapeTaint` — REP009's two hazards around the jit boundary:
+
+  - **host→trace**: a Python int derived from ``len(...)``/``.shape``
+    that flows through assignments/returns/parameters into a *traced*
+    argument of a jitted callable compiles a fresh program per size
+    (REP004 catches the direct call-site pattern; this catches the value
+    after it has traveled).  ``_bucket(...)`` and ``numpy`` scalar wraps
+    (``np.int32(...)``) launder the taint — those are the documented
+    compliant patterns.
+  - **trace→host**: a *traced* value (non-static jit parameter, or
+    anything derived from one — including inside helpers the jit body
+    calls) reaching Python control flow: ``if``/``while``/ternary/
+    ``assert`` tests, ``bool()``/``int()``/``float()``/``range()``.
+    Branching on a tracer concretizes it (error or silent retrace).
+    ``x is None`` / ``x is not None`` tests are exempt — that comparison
+    is the static-split idiom REP001 *requires*.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+from typing import Dict, FrozenSet, List, Optional, Set, Tuple
+
+from .callgraph import CallGraph, FunctionInfo, body_walk
+from .walker import FunctionNode, JitSite, Project, iter_jit_sites
+
+
+# -- REP008: parameter attribute reads --------------------------------------
+
+def _nested_quals(graph: CallGraph, qual: str) -> List[str]:
+    """``qual`` plus every function nested inside it (closures read and
+    forward the tracked parameter too)."""
+    prefix = qual + "."
+    return [qual] + [q for q in graph.functions if q.startswith(prefix)]
+
+
+def attr_reads(graph: CallGraph, root_qual: str, param: str
+               ) -> Dict[str, Tuple[str, int]]:
+    """Attribute names read (``p.x`` or ``getattr(p, "x", ...)``) on
+    ``param`` of ``root_qual`` anywhere on its call paths, with the first
+    ``(path, line)`` witness for each."""
+    out: Dict[str, Tuple[str, int]] = {}
+    work: List[Tuple[str, str]] = [(root_qual, param)]
+    seen: Set[Tuple[str, str]] = set()
+    while work:
+        qual, p = work.pop()
+        if (qual, p) in seen:
+            continue
+        seen.add((qual, p))
+        info = graph.functions.get(qual)
+        if info is None:
+            continue
+        rel = info.sf.rel
+        for node in ast.walk(info.node):
+            if (isinstance(node, ast.Attribute)
+                    and isinstance(node.value, ast.Name)
+                    and node.value.id == p):
+                out.setdefault(node.attr, (rel, node.lineno))
+            elif (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Name)
+                    and node.func.id == "getattr"
+                    and len(node.args) >= 2
+                    and isinstance(node.args[0], ast.Name)
+                    and node.args[0].id == p
+                    and isinstance(node.args[1], ast.Constant)
+                    and isinstance(node.args[1].value, str)):
+                out.setdefault(node.args[1].value, (rel, node.lineno))
+        for scope in _nested_quals(graph, qual):
+            for cs in graph.calls.get(scope, ()):
+                if cs.callee is None:
+                    continue
+                callee = graph.functions.get(cs.callee)
+                if callee is None:
+                    continue
+                for pname, arg in cs.arg_bindings(callee):
+                    if isinstance(arg, ast.Name) and arg.id == p:
+                        work.append((cs.callee, pname))
+    return out
+
+
+def dataclass_fields(cls_node: ast.ClassDef) -> Dict[str, int]:
+    """Annotated field name -> def line for a dataclass body."""
+    out: Dict[str, int] = {}
+    for stmt in cls_node.body:
+        if isinstance(stmt, ast.AnnAssign) and isinstance(stmt.target,
+                                                          ast.Name):
+            out[stmt.target.id] = stmt.lineno
+    return out
+
+
+def dict_literal_keys(sf, var_name: str) -> Optional[Dict[str, int]]:
+    """String keys (-> line) of a module-level ``var_name = {...}`` dict
+    literal, or None when no such literal exists."""
+    for stmt in sf.tree.body:
+        if not isinstance(stmt, ast.Assign):
+            continue
+        for t in stmt.targets:
+            if isinstance(t, ast.Name) and t.id == var_name:
+                if not isinstance(stmt.value, ast.Dict):
+                    return None
+                out: Dict[str, int] = {}
+                for k in stmt.value.keys:
+                    if isinstance(k, ast.Constant) and isinstance(k.value,
+                                                                  str):
+                        out[k.value] = k.lineno
+                return out
+    return None
+
+
+# -- REP009: shape/tracer taint ---------------------------------------------
+
+#: callables that launder a host int for traced use — the compliant ways to
+#: pass a size-derived value into a jitted program
+_TAINT_CLEARING_HEADS = ("numpy.", "jax.numpy.")
+_TAINT_CLEARING_NAMES = frozenset({"_bucket"})
+
+_SOURCE_ATTRS = frozenset({"shape"})
+
+
+@dataclasses.dataclass
+class FnTaintSummary:
+    """How taint moves through one function (host→trace direction)."""
+
+    returns_tainted: bool = False
+    #: params that flow (unlaundered) into a traced arg of a jitted call
+    #: inside this function or its callees: param -> (path, line, jit name)
+    param_to_jit: Dict[str, Tuple[str, int, str]] = dataclasses.field(
+        default_factory=dict)
+
+
+class ShapeTaint:
+    """Project-wide shape/tracer taint facts for REP009."""
+
+    def __init__(self, project: Project, graph: CallGraph):
+        self.project = project
+        self.graph = graph
+        #: jit qualname -> JitSite for callables resolvable cross-module,
+        #: plus per-file local sites
+        self.jit_by_qual: Dict[str, JitSite] = dict(project.jit_qualnames)
+        self.local_sites: Dict[str, List[JitSite]] = {}
+        for sf in project.files:
+            sites = list(iter_jit_sites(sf))
+            if sites:
+                self.local_sites[sf.rel] = sites
+        self.summaries: Dict[str, FnTaintSummary] = {}
+        for qual in graph.functions:
+            self._summary(qual, ())
+
+    # -- host→trace --------------------------------------------------------
+
+    def _is_cleared(self, info: FunctionInfo, node: ast.Call) -> bool:
+        dotted = info.sf.dotted(node.func)
+        if dotted is not None:
+            if dotted.startswith(_TAINT_CLEARING_HEADS):
+                return True
+            if dotted.rsplit(".", 1)[-1] in _TAINT_CLEARING_NAMES:
+                return True
+        return False
+
+    def _tainted_walk(self, info: FunctionInfo, node: ast.expr,
+                      tainted: Set[str]) -> bool:
+        if isinstance(node, ast.Call):
+            if self._is_cleared(info, node):
+                return False
+            if (isinstance(node.func, ast.Name)
+                    and node.func.id == "len"):
+                return True
+            got = self.graph.resolve_call(info, node)[0]
+            if got is not None and self.summaries.get(
+                    got, FnTaintSummary()).returns_tainted:
+                return True
+            return False
+        if isinstance(node, ast.Attribute):
+            if node.attr in _SOURCE_ATTRS:
+                return True
+            return False
+        if isinstance(node, ast.Name):
+            return node.id in tainted
+        if isinstance(node, ast.Subscript):
+            return self._tainted_walk(info, node.value, tainted)
+        if isinstance(node, ast.BinOp):
+            return (self._tainted_walk(info, node.left, tainted)
+                    or self._tainted_walk(info, node.right, tainted))
+        if isinstance(node, ast.UnaryOp):
+            return self._tainted_walk(info, node.operand, tainted)
+        if isinstance(node, ast.IfExp):
+            return (self._tainted_walk(info, node.body, tainted)
+                    or self._tainted_walk(info, node.orelse, tainted))
+        return False
+
+    def local_tainted(self, info: FunctionInfo,
+                      seed: FrozenSet[str] = frozenset()) -> Set[str]:
+        """Names in ``info`` bound to shape-derived ints (simple forward
+        pass; one iteration to a small fixpoint for straight-line reuse)."""
+        tainted: Set[str] = set(seed)
+        for _ in range(3):
+            before = len(tainted)
+            for node in body_walk(info.node):
+                if isinstance(node, ast.Assign):
+                    if self._tainted_walk(info, node.value, tainted):
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                tainted.add(t.id)
+                elif isinstance(node, ast.AugAssign):
+                    if (isinstance(node.target, ast.Name)
+                            and self._tainted_walk(info, node.value,
+                                                   tainted)):
+                        tainted.add(node.target.id)
+            if len(tainted) == before:
+                break
+        return tainted
+
+    def _jit_site_for_call(self, info: FunctionInfo, node: ast.Call
+                           ) -> Optional[Tuple[str, JitSite]]:
+        dotted = info.sf.dotted(node.func)
+        if dotted in self.jit_by_qual:
+            return dotted, self.jit_by_qual[dotted]
+        qual = self.graph.resolve_call(info, node)[0]
+        if qual is not None and qual in self.graph.functions:
+            target = self.graph.functions[qual]
+            for site in self.local_sites.get(target.sf.rel, ()):
+                if site.fn is target.node:
+                    return qual, site
+        if isinstance(node.func, ast.Name):
+            for site in self.local_sites.get(info.sf.rel, ()):
+                if site.fn.name == node.func.id:
+                    return node.func.id, site
+        return None
+
+    @staticmethod
+    def traced_positions(site: JitSite) -> Dict[int, str]:
+        """positional index -> param name for the NON-static params of a
+        jitted function."""
+        fn = site.fn
+        args = fn.args
+        params = [p.arg for p in
+                  list(getattr(args, "posonlyargs", [])) + args.args]
+        static_names = set(site.static_argnames or ())
+        static_nums = set(site.static_argnums or ())
+        return {i: p for i, p in enumerate(params)
+                if p not in static_names and i not in static_nums}
+
+    def _summary(self, qual: str, stack: Tuple[str, ...]) -> FnTaintSummary:
+        if qual in self.summaries:
+            return self.summaries[qual]
+        if qual in stack or len(stack) > 12:
+            return FnTaintSummary()
+        self.summaries[qual] = FnTaintSummary()  # cycle-safe placeholder
+        info = self.graph.functions[qual]
+        summary = FnTaintSummary()
+        params = set(info.params)
+        # which params reach a traced jit position, here or deeper
+        tainted = self.local_tainted(info, frozenset())
+        for cs in self.graph.calls.get(qual, ()):
+            node = cs.node
+            hit = self._jit_site_for_call(info, node)
+            if hit is not None:
+                name, site = hit
+                traced = self.traced_positions(site)
+                for i, arg in enumerate(node.args):
+                    if i not in traced or not isinstance(arg, ast.Name):
+                        continue
+                    if arg.id in params:
+                        summary.param_to_jit.setdefault(
+                            arg.id, (info.sf.rel, node.lineno, str(name)))
+                continue
+            if cs.callee is None or cs.callee not in self.graph.functions:
+                continue
+            sub = self._summary(cs.callee, stack + (qual,))
+            callee_info = self.graph.functions[cs.callee]
+            for pname, arg in cs.arg_bindings(callee_info):
+                if pname in sub.param_to_jit and isinstance(arg, ast.Name) \
+                        and arg.id in params:
+                    summary.param_to_jit.setdefault(
+                        arg.id, sub.param_to_jit[pname])
+        # does the function return a tainted expression?
+        for node in body_walk(info.node):
+            if isinstance(node, ast.Return) and node.value is not None:
+                if self._tainted_walk(info, node.value, tainted):
+                    summary.returns_tainted = True
+                    break
+        self.summaries[qual] = summary
+        return summary
+
+    def host_to_trace_findings(self):
+        """(path, line, message) for tainted values entering traced jit
+        positions — via a local variable or via a call that forwards a
+        tainted argument into a param that reaches a jit inside the
+        callee.  Direct ``len(...)``/``.shape`` argument expressions are
+        REP004's; only *traveled* taint fires here."""
+        for qual, info in self.graph.functions.items():
+            tainted = self.local_tainted(info)
+            for cs in self.graph.calls.get(qual, ()):
+                node = cs.node
+                hit = self._jit_site_for_call(info, node)
+                if hit is not None:
+                    name, site = hit
+                    traced = self.traced_positions(site)
+                    for i, arg in enumerate(node.args):
+                        if i not in traced:
+                            continue
+                        if not isinstance(arg, ast.Name):
+                            continue  # direct exprs belong to REP004
+                        if arg.id in tainted:
+                            yield (info.sf.rel, node.lineno,
+                                   f"{qual} passes '{arg.id}' — a "
+                                   f"len()/.shape-derived Python int — as "
+                                   f"traced argument "
+                                   f"'{traced[i]}' of jitted {name}: "
+                                   f"compiles a fresh program per size; "
+                                   f"bucket it (_bucket), wrap as "
+                                   f"np.int32, or declare it static")
+                    continue
+                if cs.callee is None or cs.callee not in self.graph.functions:
+                    continue
+                sub = self.summaries.get(cs.callee)
+                if sub is None or not sub.param_to_jit:
+                    continue
+                callee_info = self.graph.functions[cs.callee]
+                for pname, arg in cs.arg_bindings(callee_info):
+                    if pname not in sub.param_to_jit:
+                        continue
+                    if not isinstance(arg, ast.Name):
+                        continue
+                    if arg.id in tainted:
+                        _, _, jname = sub.param_to_jit[pname]
+                        yield (info.sf.rel, node.lineno,
+                               f"{qual} passes tainted '{arg.id}' "
+                               f"(len()/.shape-derived) to "
+                               f"{cs.callee}, whose param '{pname}' "
+                               f"reaches a traced argument of jitted "
+                               f"{jname}: bucket it (_bucket), wrap as "
+                               f"np.int32, or declare it static")
+
+    # -- trace→host --------------------------------------------------------
+
+    #: attributes of a tracer that are STATIC Python values inside a trace
+    #: (shapes are known at trace time) — reading them is the compliant way
+    #: to branch, so they clear traced taint.  ``len(tracer)`` is
+    #: ``shape[0]`` and equally static.
+    _STATIC_EXTRACTORS = frozenset({"shape", "ndim", "dtype", "size"})
+
+    @staticmethod
+    def _is_static_split(test: ast.expr) -> bool:
+        """``x is None`` / ``x is not None`` / isinstance — the sanctioned
+        static splits (REP001's required idiom)."""
+        if isinstance(test, ast.Compare):
+            if all(isinstance(op, (ast.Is, ast.IsNot))
+                   for op in test.ops):
+                return True
+        if (isinstance(test, ast.Call)
+                and isinstance(test.func, ast.Name)
+                and test.func.id == "isinstance"):
+            return True
+        return False
+
+    def _first_tainted_name(self, node: ast.expr,
+                            tainted: Set[str]) -> Optional[str]:
+        """First tainted Name in ``node`` that is used as a traced VALUE —
+        names under a static extractor (``x.shape``, ``len(x)``, ...) are
+        skipped: those are trace-time Python ints, not tracers."""
+        if (isinstance(node, ast.Attribute)
+                and node.attr in self._STATIC_EXTRACTORS):
+            return None
+        if (isinstance(node, ast.Call) and isinstance(node.func, ast.Name)
+                and node.func.id == "len"):
+            return None
+        if isinstance(node, ast.Name):
+            return node.id if node.id in tainted else None
+        for child in ast.iter_child_nodes(node):
+            got = self._first_tainted_name(child, tainted)
+            if got is not None:
+                return got
+        return None
+
+    def traced_escape_findings(self):
+        """(path, line, message) for traced values reaching Python control
+        flow inside jit bodies and the helpers they call."""
+        seen_fn: Set[Tuple[str, FrozenSet[str]]] = set()
+        emitted: Set[Tuple[str, int]] = set()
+
+        def scan(info: FunctionInfo, traced_params: FrozenSet[str],
+                 origin: str, depth: int):
+            key = (info.qualname, traced_params)
+            if key in seen_fn or depth > 6:
+                return
+            seen_fn.add(key)
+            tainted = self.local_tainted_traced(info, traced_params)
+            for node in body_walk(info.node):
+                test: Optional[ast.expr] = None
+                what = None
+                if isinstance(node, (ast.If, ast.While)):
+                    test, what = node.test, "branches on"
+                elif isinstance(node, ast.IfExp):
+                    test, what = node.test, "selects on"
+                elif isinstance(node, ast.Assert):
+                    test, what = node.test, "asserts on"
+                elif (isinstance(node, ast.Call)
+                        and isinstance(node.func, ast.Name)
+                        and node.func.id in ("bool", "int", "float",
+                                             "range")
+                        and node.args):
+                    test, what = node.args[0], \
+                        f"concretizes (via {node.func.id}())"
+                if test is None or self._is_static_split(test):
+                    continue
+                name = self._first_tainted_name(test, tainted)
+                if name is None:
+                    continue
+                at = (info.sf.rel, node.lineno)
+                if at in emitted:
+                    continue
+                emitted.add(at)
+                yield (info.sf.rel, node.lineno,
+                       f"{info.qualname} {what} '{name}', a traced value "
+                       f"from jitted {origin}: Python control flow "
+                       f"concretizes tracers (error or silent retrace); "
+                       f"branch on a static arg, use jnp.where/lax.cond, "
+                       f"or split statically with 'x is None'")
+            # follow tainted args into project helpers
+            for cs in self.graph.calls.get(info.qualname, ()):
+                if cs.callee is None or cs.callee not in self.graph.functions:
+                    continue
+                callee = self.graph.functions[cs.callee]
+                fwd = set()
+                for pname, arg in cs.arg_bindings(callee):
+                    if (isinstance(arg, ast.Name) and arg.id in tainted):
+                        fwd.add(pname)
+                if fwd:
+                    yield from scan(callee, frozenset(fwd), origin,
+                                    depth + 1)
+
+        for rel, sites in self.local_sites.items():
+            for site in sites:
+                qual = self._qual_of_site(site)
+                if qual is None:
+                    continue
+                info = self.graph.functions[qual]
+                traced = frozenset(self.traced_positions(site).values())
+                if traced:
+                    yield from scan(info, traced, site.fn.name, 0)
+
+    def local_tainted_traced(self, info: FunctionInfo,
+                             seed: FrozenSet[str]) -> Set[str]:
+        """Traced-taint propagation: assignments keep taint; numpy wraps do
+        NOT clear it (np.int32(tracer) is still a tracer hazard at the
+        python level? no — but int()/bool() sinks are flagged separately);
+        here anything containing a tainted name taints the target."""
+        tainted: Set[str] = set(seed)
+        for _ in range(3):
+            before = len(tainted)
+            for node in body_walk(info.node):
+                if isinstance(node, ast.Assign):
+                    if self._first_tainted_name(node.value,
+                                                tainted) is not None:
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                tainted.add(t.id)
+                            elif isinstance(t, (ast.Tuple, ast.List)):
+                                for e in t.elts:
+                                    if isinstance(e, ast.Name):
+                                        tainted.add(e.id)
+            if len(tainted) == before:
+                break
+        return tainted
+
+    def _qual_of_site(self, site: JitSite) -> Optional[str]:
+        for qual, info in self.graph.functions.items():
+            if info.node is site.fn:
+                return qual
+        return None

@@ -1,4 +1,4 @@
-"""The repro invariant rules (REP000–REP006).
+"""The repro invariant rules (REP000–REP009).
 
 Each rule encodes a correctness discipline this repo actually shipped a bug
 against (or nearly did) — see docs/analysis.md for the incident behind each
@@ -15,6 +15,9 @@ from __future__ import annotations
 import ast
 from typing import Dict, Iterator, List, Optional, Set, Tuple
 
+from . import dataflow as df
+from .callgraph import get_callgraph
+from .locksets import LockAnalysis
 from .registry import Finding, known_codes, rule
 from .walker import FunctionNode, Project, SourceFile, iter_jit_sites
 
@@ -126,7 +129,8 @@ def check_parity_purity(project: Project) -> Iterator[Finding]:
 # REP002 — RNG discipline (byte-identical host draw streams)
 # --------------------------------------------------------------------------
 
-REP002_PREFIXES = ("src/repro/core/", "benchmarks/", "examples/")
+REP002_PREFIXES = ("src/repro/core/", "benchmarks/", "examples/",
+                   "scripts/")
 REP002_JAX_SCOPE = "src/repro/core/"
 #: numpy.random attributes that are NOT legacy global-state draws
 _NP_RANDOM_OK = {"default_rng", "Generator", "SeedSequence", "BitGenerator",
@@ -541,3 +545,144 @@ def check_registry(project: Project) -> Iterator[Finding]:
             f"parity bench {bench!r} has no REQUIRED_KEYS entry — its "
             f"derived metrics could be dropped from a fresh artifact "
             f"without failing scripts/diff_bench.py")
+
+
+# --------------------------------------------------------------------------
+# REP007 — lock order (interprocedural; the PR 7 dispatcher's lock set)
+# --------------------------------------------------------------------------
+
+@rule("REP007", "lock-order",
+      "no acquisition-order cycles, self-deadlocks, or blocking calls "
+      "while holding a lock (interprocedural)")
+def check_lock_order(project: Project) -> Iterator[Finding]:
+    analysis = LockAnalysis(project, get_callgraph(project))
+    for rel, line, msg in analysis.self_deadlocks():
+        yield Finding(rel, line, "REP007", msg)
+    for cycle, witnesses in analysis.cycles():
+        if not witnesses:
+            continue
+        rel, line, _ = witnesses[0]
+        chain = " -> ".join(cycle + (cycle[0],))
+        ws = "; ".join(f"{r}:{ln} {how}" for r, ln, how in witnesses)
+        yield Finding(
+            rel, line, "REP007",
+            f"lock acquisition-order cycle {chain} — two threads taking "
+            f"the locks in opposite order deadlock; pick one global order "
+            f"(witnesses: {ws})")
+    for rel, line, msg in analysis.blocking_under_lock():
+        yield Finding(rel, line, "REP007", msg)
+
+
+# --------------------------------------------------------------------------
+# REP008 — cache-key completeness (stale-cache wrong answers)
+# --------------------------------------------------------------------------
+
+#: the module-level dict naming GAConfig fields deliberately NOT in
+#: ga_params_key, each with its justification — lives next to ga_params_key
+EXCLUDED_FIELDS_NAME = "GA_KEY_EXCLUDED_FIELDS"
+
+
+def _first_param(fn: ast.AST) -> Optional[str]:
+    a = fn.args
+    pos = list(getattr(a, "posonlyargs", [])) + a.args
+    return pos[0].arg if pos else None
+
+
+def _direct_attr_reads(fn: ast.AST, param: str) -> Dict[str, int]:
+    out: Dict[str, int] = {}
+    for node in ast.walk(fn):
+        if (isinstance(node, ast.Attribute)
+                and isinstance(node.value, ast.Name)
+                and node.value.id == param):
+            out.setdefault(node.attr, node.lineno)
+    return out
+
+
+@rule("REP008", "cache-key-completeness",
+      "every result-affecting GAConfig field is folded into ga_params_key "
+      "or explicitly excluded with a justification")
+def check_cache_key(project: Project) -> Iterator[Finding]:
+    graph = get_callgraph(project)
+
+    key_fns = graph.find_by_name("ga_params_key")
+    run_fns = graph.find_by_name("run_batched_ga")
+    cfg_classes = [(sf, node) for sf in project.files
+                   for node in ast.walk(sf.tree)
+                   if isinstance(node, ast.ClassDef)
+                   and node.name == "GAConfig"]
+    if not key_fns or not run_fns or not cfg_classes:
+        return                       # anchors absent: nothing to compare
+    key_fn = key_fns[0]
+    run_fn = run_fns[0]
+    cfg_sf, cfg_cls = cfg_classes[0]
+
+    fields = df.dataclass_fields(cfg_cls)
+    key_param = _first_param(key_fn.node)
+    keyed = set(_direct_attr_reads(key_fn.node, key_param)) \
+        if key_param else set()
+    excluded = df.dict_literal_keys(key_fn.sf, EXCLUDED_FIELDS_NAME) or {}
+
+    reads: Dict[str, Tuple[str, int]] = {}
+    if "cfg" in run_fn.params:
+        reads = df.attr_reads(graph, run_fn.qualname, "cfg")
+
+    for f, def_line in sorted(fields.items()):
+        in_key = f in keyed
+        in_excl = f in excluded
+        if in_key and in_excl:
+            yield Finding(
+                key_fn.sf.rel, excluded[f], "REP008",
+                f"GAConfig field {f!r} is both folded into ga_params_key "
+                f"and listed in {EXCLUDED_FIELDS_NAME} — the exclusion "
+                f"list must name only fields the key omits")
+            continue
+        if in_key or in_excl:
+            continue
+        if f in reads:
+            rel, line = reads[f]
+            yield Finding(
+                rel, line, "REP008",
+                f"GAConfig field {f!r} is read on run_batched_ga's "
+                f"dispatch path but folded into neither ga_params_key nor "
+                f"{EXCLUDED_FIELDS_NAME} — two configs differing only in "
+                f"{f!r} share a cache key, so the second gets the first's "
+                f"STALE result; add it to the key or classify it as a "
+                f"placement knob")
+        else:
+            yield Finding(
+                cfg_sf.rel, def_line, "REP008",
+                f"GAConfig field {f!r} is in neither ga_params_key nor "
+                f"{EXCLUDED_FIELDS_NAME} — every field must be classified "
+                f"when added (key member if it can affect results, or an "
+                f"entry in {EXCLUDED_FIELDS_NAME} with a justification) "
+                f"so the row cache can never serve stale results")
+
+    # every wave-group key must fold the GA params in
+    for gk in graph.find_by_name("group_key"):
+        calls_key = any(
+            cs.callee == key_fn.qualname
+            or (isinstance(cs.node.func, ast.Name)
+                and cs.node.func.id == "ga_params_key")
+            for cs in graph.calls.get(gk.qualname, ()))
+        if not calls_key:
+            yield Finding(
+                gk.sf.rel, gk.node.lineno, "REP008",
+                "group_key does not fold ga_params_key(cfg) in — queries "
+                "with different GA parameters would share one engine wave "
+                "group and cross-contaminate rows; include "
+                "ga_params_key(self.cfg) in the tuple")
+
+
+# --------------------------------------------------------------------------
+# REP009 — traced-value escape (dataflow upgrade of REP004)
+# --------------------------------------------------------------------------
+
+@rule("REP009", "traced-value-escape",
+      "len()/.shape-derived ints must not travel into traced jit args, "
+      "and traced values must not reach Python control flow")
+def check_traced_escape(project: Project) -> Iterator[Finding]:
+    taint = df.ShapeTaint(project, get_callgraph(project))
+    for rel, line, msg in taint.host_to_trace_findings():
+        yield Finding(rel, line, "REP009", msg)
+    for rel, line, msg in taint.traced_escape_findings():
+        yield Finding(rel, line, "REP009", msg)

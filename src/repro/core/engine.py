@@ -217,6 +217,18 @@ class ChunkInputs(NamedTuple):
     gens: int
 
 
+# GAConfig fields deliberately NOT folded into ga_params_key, with why each
+# one can never change a row result.  The REP008 lint compares this dict +
+# the key against the fields the dispatch path actually reads: adding a
+# GAConfig field fails lint until it is classified here or keyed.
+GA_KEY_EXCLUDED_FIELDS = {
+    "engine": "serial/batched produce bit-identical rows (golden parity)",
+    "pipeline": "scheduling only; per-chunk inputs/outputs unchanged",
+    "devices": "placement only; sharded results are bit-identical",
+    "seed": "keyed per-row: row_cache_key folds EngineRow.seed instead",
+}
+
+
 def ga_params_key(cfg) -> tuple:
     """The GAConfig fields a row's search RESULT depends on, as a hashable
     key.  Placement/scheduling knobs (``engine``, ``pipeline``, ``devices``)

@@ -1,0 +1,147 @@
+"""Runtime lock-order recorder — the dynamic half of REP007.
+
+The static analysis (``repro.analysis.locksets``) derives the set of legal
+``(held, then-acquired)`` lock-order pairs from the AST.  This module wraps
+the four real locks in recording proxies so a concurrency test can assert
+that every order *actually taken* at runtime is a subset of the statically
+derived graph: if the static analysis ever under-approximates (a lock the
+call-graph resolution missed), the runtime cross-check catches the drift.
+
+Usage (see tests/test_dse_service.py)::
+
+    rec = LockOrderRecorder()
+    with rec.patch_flexion(monkeypatch):
+        cache = ResultCache()
+        rec.wrap_instance_lock(cache, "repro.core.result_cache."
+                                      "ResultCache._lock")
+        ...
+    assert rec.edges <= static_edges
+"""
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Set, Tuple
+
+#: the canonical lock ids the static analysis derives for the real tree
+TABLE_LOCK_ID = "repro.core.flexion_batched._TABLE_LOCK"
+JAX_EVAL_LOCK_ID = "repro.core.flexion_batched._JAX_EVAL_LOCK"
+RESULT_CACHE_LOCK_ID = "repro.core.result_cache.ResultCache._lock"
+DSE_SERVICE_LOCK_ID = "repro.serve.dse_service.DSEService._lock"
+
+
+class RecordingLock:
+    """Proxy around a real lock that records (held, acquiring) pairs on a
+    per-thread held-stack.  Supports the full Lock/RLock protocol so
+    ``threading.Condition`` can wrap it (wait/notify delegate through
+    ``acquire``/``release``/``_is_owned``)."""
+
+    def __init__(self, name: str, inner, recorder: "LockOrderRecorder"):
+        self.name = name
+        self._inner = inner
+        self._rec = recorder
+
+    def acquire(self, blocking: bool = True, timeout: float = -1):
+        got = self._inner.acquire(blocking, timeout)
+        if got:
+            # record only on success: Condition probes ownership with
+            # acquire(0), and a failed probe is not an acquisition
+            self._rec._on_acquire(self.name)
+        return got
+
+    def release(self):
+        self._rec._on_release(self.name)
+        self._inner.release()
+
+    def __enter__(self):
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc):
+        self.release()
+        return False
+
+    # Condition uses these when available (RLock); absent on plain Lock is
+    # fine too, but delegating keeps RLock semantics intact.
+    def _is_owned(self):
+        if hasattr(self._inner, "_is_owned"):
+            return self._inner._is_owned()
+        # plain Lock: Condition's fallback probe
+        if self._inner.acquire(False):
+            self._inner.release()
+            return False
+        return True
+
+    def _release_save(self):
+        self._rec._on_release(self.name)
+        if hasattr(self._inner, "_release_save"):
+            return self._inner._release_save()
+        self._inner.release()
+        return None
+
+    def _acquire_restore(self, state):
+        if hasattr(self._inner, "_acquire_restore"):
+            self._inner._acquire_restore(state)
+        else:
+            self._inner.acquire()
+        self._rec._on_acquire(self.name)
+
+
+class LockOrderRecorder:
+    """Collects the (held, acquired) edges every thread takes."""
+
+    def __init__(self):
+        self.edges: Set[Tuple[str, str]] = set()
+        self.acquired: Set[str] = set()
+        self._tls = threading.local()
+        self._mu = threading.Lock()
+
+    def _stack(self):
+        if not hasattr(self._tls, "stack"):
+            self._tls.stack = []
+        return self._tls.stack
+
+    def _on_acquire(self, name: str) -> None:
+        stack = self._stack()
+        with self._mu:
+            self.acquired.add(name)
+            for held in stack:
+                if held != name:
+                    self.edges.add((held, name))
+        stack.append(name)
+
+    def _on_release(self, name: str) -> None:
+        stack = self._stack()
+        # remove the innermost matching entry (re-entrant RLocks push twice)
+        for i in range(len(stack) - 1, -1, -1):
+            if stack[i] == name:
+                del stack[i]
+                break
+
+    # -- injection helpers -------------------------------------------------
+
+    def wrap(self, name: str, inner) -> RecordingLock:
+        return RecordingLock(name, inner, self)
+
+    def wrap_instance_lock(self, obj, name: str, attr: str = "_lock"):
+        """Replace ``obj.<attr>`` with a recording proxy in place."""
+        setattr(obj, attr, self.wrap(name, getattr(obj, attr)))
+        return obj
+
+    @contextmanager
+    def patch_flexion(self, monkeypatch):
+        """Swap the two module-level flexion locks for recording proxies."""
+        from repro.core import flexion_batched as fb
+        monkeypatch.setattr(fb, "_TABLE_LOCK",
+                            self.wrap(TABLE_LOCK_ID, threading.Lock()))
+        monkeypatch.setattr(fb, "_JAX_EVAL_LOCK",
+                            self.wrap(JAX_EVAL_LOCK_ID, threading.Lock()))
+        yield self
+
+    def lock_factory(self, name: str):
+        """A ``threading.Lock``-compatible factory producing recording
+        proxies — substitute for the ``threading`` module of ONE module so
+        only its ``threading.Lock()`` calls are intercepted."""
+        def factory():
+            return self.wrap(name, threading.Lock())
+        return factory

@@ -3,6 +3,7 @@ historical bug it encodes and stays quiet on the compliant pattern;
 suppression parsing, JSON output shape, CLI exit codes, and the generated
 env-var docs table are pinned here too."""
 import json
+import re
 import textwrap
 from pathlib import Path
 
@@ -392,15 +393,79 @@ def test_cli_list_rules_covers_all_codes(capsys):
     assert cli_main(["--list-rules"]) == 0
     out = capsys.readouterr().out
     for code in ("REP000", "REP001", "REP002", "REP003", "REP004",
-                 "REP005", "REP006"):
+                 "REP005", "REP006", "REP007", "REP008", "REP009"):
         assert code in out
-    assert len(all_rules()) == 7
+    assert len(all_rules()) == 10
 
 
 def test_cli_bad_usage_exits_two():
     with pytest.raises(SystemExit) as e:
         cli_main(["--format", "yaml"])
     assert e.value.code == 2
+
+
+def _dirty_tree(tmp_path):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "dirty.py").write_text(
+        "import os\nV = os.environ.get('REPRO_NOT_A_REAL_KNOB')\n")
+
+
+def test_cli_github_format_renders_workflow_commands(tmp_path, capsys):
+    _dirty_tree(tmp_path)
+    rc = cli_main(["--root", str(tmp_path), "--format", "github",
+                   "dirty.py"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "::error file=dirty.py,line=2,title=REP006::" in out
+
+
+def test_cli_baseline_roundtrip_demotes_known_findings(tmp_path, capsys):
+    _dirty_tree(tmp_path)
+    base = tmp_path / "lint-baseline.json"
+    assert cli_main(["--root", str(tmp_path), "--write-baseline",
+                     str(base), "dirty.py"]) == 0
+    doc = json.loads(base.read_text())
+    assert doc["version"] == 1 and len(doc["entries"]) == 1
+    capsys.readouterr()
+    # with the baseline, the known finding is demoted to suppressed
+    rc = cli_main(["--root", str(tmp_path), "--format", "json",
+                   "--baseline", str(base), "dirty.py"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    assert out["unsuppressed"] == 0 and out["suppressed"] == 1
+    # a NEW finding still fails past the baseline
+    (tmp_path / "dirty.py").write_text(
+        "import os\nV = os.environ.get('REPRO_NOT_A_REAL_KNOB')\n"
+        "W = os.environ.get('REPRO_ALSO_NOT_REAL')\n")
+    capsys.readouterr()
+    rc = cli_main(["--root", str(tmp_path), "--format", "json",
+                   "--baseline", str(base), "dirty.py"])
+    out = json.loads(capsys.readouterr().out)
+    assert rc == 1
+    assert out["unsuppressed"] == 1 and out["suppressed"] == 1
+
+
+def test_cli_missing_baseline_is_usage_error(tmp_path):
+    _dirty_tree(tmp_path)
+    with pytest.raises(SystemExit) as e:
+        cli_main(["--root", str(tmp_path),
+                  "--baseline", str(tmp_path / "nope.json"), "dirty.py"])
+    assert e.value.code == 2
+
+
+def test_cli_budget_and_elapsed_in_summary(tmp_path, capsys):
+    (tmp_path / "pyproject.toml").write_text("[project]\nname='x'\n")
+    (tmp_path / "clean.py").write_text("def f():\n    return 1\n")
+    rc = cli_main(["--root", str(tmp_path), "clean.py"])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert re.search(r"in \d+\.\d\ds", out)   # wall clock always printed
+    # an impossible budget turns a clean run into exit 1
+    rc = cli_main(["--root", str(tmp_path), "--budget-seconds", "0",
+                   "clean.py"])
+    err = capsys.readouterr().err
+    assert rc == 1
+    assert "lint budget exceeded" in err
 
 
 # -- env-var registry / generated docs ------------------------------------

@@ -1,0 +1,470 @@
+"""The interprocedural dataflow framework behind REP007–REP009: call-graph
+construction (aliased imports, methods, functools.partial, cycles), lockset
+summaries, and the three flow-based rules — each planted bug must fire
+exactly its rule, and each compliant pattern must stay quiet."""
+import textwrap
+
+from repro.analysis import analyze
+from repro.analysis.callgraph import CallGraph, get_callgraph
+from repro.analysis.locksets import LockAnalysis, lock_order_edges
+from repro.analysis.walker import Project
+
+FLOW_RULES = ["REP007", "REP008", "REP009"]
+
+
+def _project(tmp_path, files, **kw):
+    for rel, src in files.items():
+        p = tmp_path / rel
+        p.parent.mkdir(parents=True, exist_ok=True)
+        p.write_text(textwrap.dedent(src))
+    kw.setdefault("scope_all", True)
+    kw.setdefault("registered_env", set())
+    return Project.load(tmp_path, sorted(files), **kw)
+
+
+def _flow_findings(project):
+    return [f for f in analyze(project, select=FLOW_RULES)
+            if not f.suppressed]
+
+
+# -- call graph -------------------------------------------------------------
+
+
+def test_callgraph_resolves_aliased_cross_module_calls(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/util.py": """
+            def helper():
+                return 1
+        """,
+        "src/repro/serve/app.py": """
+            from repro.core import util as u
+            from ..core.util import helper as h
+
+            def via_module():
+                return u.helper()
+
+            def via_symbol():
+                return h()
+        """,
+    })
+    g = CallGraph(p)
+    assert g.callees("repro.serve.app.via_module") == {
+        "repro.core.util.helper"}
+    assert g.callees("repro.serve.app.via_symbol") == {
+        "repro.core.util.helper"}
+
+
+def test_callgraph_resolves_methods_and_typed_receivers(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/store.py": """
+            class Store:
+                def __init__(self):
+                    self.n = 0
+
+                def bump_twice(self):
+                    self.bump()
+                    self.bump()
+
+                def bump(self):
+                    self.n += 1
+        """,
+        "src/repro/serve/owner.py": """
+            from repro.core.store import Store
+
+            GLOBAL = Store()
+
+            class Owner:
+                def __init__(self, store=None):
+                    self.store = store if store is not None else Store()
+
+                def poke(self):
+                    self.store.bump_twice()
+
+            def poke_global():
+                GLOBAL.bump_twice()
+        """,
+    })
+    g = CallGraph(p)
+    assert g.callees("repro.core.store.Store.bump_twice") == {
+        "repro.core.store.Store.bump"}
+    # attr-type inference through the `x if x is not None else Cls()` idiom
+    assert g.callees("repro.serve.owner.Owner.poke") == {
+        "repro.core.store.Store.bump_twice"}
+    # module-level instance
+    assert g.callees("repro.serve.owner.poke_global") == {
+        "repro.core.store.Store.bump_twice"}
+    # constructor call resolves to __init__
+    assert "repro.core.store.Store.__init__" in g.callees(
+        "repro.serve.owner.Owner.__init__")
+
+
+def test_callgraph_resolves_functools_partial(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/p.py": """
+            import functools
+
+            def target(a, b, c):
+                return a + b + c
+
+            bound = functools.partial(target, 1)
+
+            def direct():
+                return functools.partial(target, 1, 2)(3)
+
+            def via_binding():
+                f = functools.partial(target, 1)
+                return f(2, 3)
+
+            def via_module_binding():
+                return bound(2, 3)
+        """,
+    })
+    g = CallGraph(p)
+    for fn in ("direct", "via_binding", "via_module_binding"):
+        assert g.callees(f"repro.core.p.{fn}") == {"repro.core.p.target"}, fn
+    # bound positional count shifts the arg->param mapping
+    cs = [c for c in g.calls["repro.core.p.via_binding"]
+          if c.callee == "repro.core.p.target"][0]
+    target = g.lookup("repro.core.p.target")
+    assert [p for p, _ in cs.arg_bindings(target)] == ["b", "c"]
+
+
+def test_callgraph_cycles_do_not_diverge(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/c.py": """
+            def even(n):
+                return True if n == 0 else odd(n - 1)
+
+            def odd(n):
+                return False if n == 0 else even(n - 1)
+        """,
+    })
+    g = CallGraph(p)
+    assert g.callees("repro.core.c.even") == {"repro.core.c.odd"}
+    assert g.callees("repro.core.c.odd") == {"repro.core.c.even"}
+    # lockset fixpoint must terminate on the cycle too
+    LockAnalysis(p, g)
+
+
+# -- REP007: lock order -----------------------------------------------------
+
+ABBA = {
+    "src/repro/core/locks.py": """
+        import threading
+
+        LOCK_A = threading.Lock()
+        LOCK_B = threading.Lock()
+
+        def take_b_then_work():
+            with LOCK_B:
+                return 1
+
+        def path_one():
+            with LOCK_A:
+                return take_b_then_work()   # A held -> acquires B
+
+        def path_two():
+            with LOCK_B:
+                with LOCK_A:                # B held -> acquires A
+                    return 2
+    """,
+}
+
+
+def test_rep007_fires_on_interprocedural_abba_deadlock(tmp_path):
+    findings = _flow_findings(_project(tmp_path, ABBA))
+    assert {f.code for f in findings} == {"REP007"}
+    assert any("cycle" in f.message for f in findings)
+
+
+def test_rep007_self_deadlock_through_call_closure(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/again.py": """
+            import threading
+
+            MU = threading.Lock()
+
+            def inner():
+                with MU:
+                    return 1
+
+            def outer():
+                with MU:
+                    return inner()      # re-enters a non-reentrant lock
+        """,
+    })
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP007"}
+    assert any("guaranteed deadlock" in f.message for f in findings)
+
+
+def test_rep007_blocking_call_under_lock_and_condition_exemption(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/serve/svc.py": """
+            import threading
+            import time
+
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._wake = threading.Condition(self._lock)
+
+                def bad(self):
+                    with self._lock:
+                        time.sleep(1)       # blocks all contenders
+
+                def fine(self):
+                    with self._wake:
+                        self._wake.wait()   # releases its own sole lock
+        """,
+    })
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP007"}
+    assert len(findings) == 1
+    assert "time.sleep" in findings[0].message
+    assert findings[0].line != 0
+
+
+def test_rep007_condition_aliases_its_wrapped_lock(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/serve/svc.py": """
+            import threading
+
+            class Svc:
+                def __init__(self):
+                    self._lock = threading.Lock()
+                    self._wake = threading.Condition(self._lock)
+
+                def ok(self):
+                    with self._lock:
+                        return 1
+
+                def also_ok(self):
+                    with self._wake:
+                        return 2
+        """,
+    })
+    g = get_callgraph(p)
+    la = LockAnalysis(p, g)
+    lock_id = "repro.serve.svc.Svc._lock"
+    assert la.conditions == {"repro.serve.svc.Svc._wake": lock_id}
+    held = [a.lock for s in la.summaries.values() for a in s.acquires]
+    assert held.count(lock_id) == 2     # both entries resolve to ONE lock
+    assert _flow_findings(p) == []
+
+
+def test_lock_order_edges_exported_for_runtime_cross_check(tmp_path):
+    p = _project(tmp_path, ABBA)
+    edges = lock_order_edges(p)
+    assert ("src/repro/core/locks.py" not in str(edges))  # ids are dotted
+    assert ("repro.core.locks.LOCK_A", "repro.core.locks.LOCK_B") in edges
+    assert ("repro.core.locks.LOCK_B", "repro.core.locks.LOCK_A") in edges
+
+
+# -- REP008: cache-key completeness ----------------------------------------
+
+KEYED = """
+    import dataclasses
+
+    @dataclasses.dataclass(frozen=True)
+    class GAConfig:
+        population: int = 8
+        devices: object = None
+        {extra_field}
+
+    GA_KEY_EXCLUDED_FIELDS = {{
+        "devices": "placement only; results bit-identical",
+        {extra_excl}
+    }}
+
+    def ga_params_key(cfg):
+        return ("ga-v1", cfg.population, {extra_key})
+
+    def n_draws(cfg):
+        return cfg.population {extra_read}
+
+    def run_batched_ga(rows, cfg):
+        return [n_draws(cfg) for _ in rows]
+"""
+
+
+def _keyed(extra_field="", extra_excl="", extra_key="", extra_read=""):
+    return {"src/repro/core/engine.py": KEYED.format(
+        extra_field=extra_field or "pass_", extra_excl=extra_excl,
+        extra_key=extra_key, extra_read=extra_read).replace("pass_", "")}
+
+
+def test_rep008_quiet_when_every_field_is_classified(tmp_path):
+    assert _flow_findings(_project(tmp_path, _keyed())) == []
+
+
+def test_rep008_fires_on_field_read_but_not_keyed(tmp_path):
+    p = _project(tmp_path, _keyed(
+        extra_field="mut_rate: float = 0.1",
+        extra_read="* cfg.mut_rate"))
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP008"}
+    assert any("mut_rate" in f.message and "STALE" in f.message
+               for f in findings)
+
+
+def test_rep008_fires_on_unclassified_new_field(tmp_path):
+    p = _project(tmp_path, _keyed(extra_field="shiny: int = 3"))
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP008"}
+    assert any("shiny" in f.message and "classified" in f.message
+               for f in findings)
+
+
+def test_rep008_fires_on_keyed_and_excluded_contradiction(tmp_path):
+    p = _project(tmp_path, _keyed(
+        extra_field="warp: int = 1",
+        extra_excl='"warp": "claimed placement-only",',
+        extra_key="cfg.warp"))
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP008"}
+    assert any("both" in f.message for f in findings)
+
+
+def test_rep008_group_key_must_fold_ga_params(tmp_path):
+    files = _keyed()
+    files["src/repro/serve/q.py"] = """
+        from repro.core.engine import ga_params_key
+
+        class Good:
+            @property
+            def group_key(self):
+                return (self.hw, ga_params_key(self.cfg))
+
+        class Bad:
+            @property
+            def group_key(self):
+                return (self.hw,)
+    """
+    findings = _flow_findings(_project(tmp_path, files))
+    assert {f.code for f in findings} == {"REP008"}
+    assert len(findings) == 1
+    assert findings[0].path == "src/repro/serve/q.py"
+
+
+# -- REP009: traced-value escape -------------------------------------------
+
+
+def test_rep009_fires_on_traveled_len_taint(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/j.py": """
+            import jax
+
+            @jax.jit
+            def prog(x, n):
+                return x * n
+
+            def helper(data):
+                return len(data)
+
+            def driver(data, x):
+                n = helper(data)        # len() two hops away
+                return prog(x, n)
+        """,
+    })
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP009"}
+    assert any("'n'" in f.message for f in findings)
+
+
+def test_rep009_quiet_when_taint_is_laundered(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/j.py": """
+            import jax
+            import numpy as np
+
+            @jax.jit
+            def prog(x, n):
+                return x * n
+
+            def _bucket(n, base=64):
+                return base
+
+            def ok_bucketed(data, x):
+                n = _bucket(len(data))
+                return prog(x, n)
+
+            def ok_wrapped(data, x):
+                n = np.int32(len(data))
+                return prog(x, n)
+        """,
+    })
+    assert _flow_findings(p) == []
+
+
+def test_rep009_fires_on_traced_branch_across_functions(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/k.py": """
+            import jax
+
+            def pick(v):
+                if v > 0:               # traced value in Python control flow
+                    return v
+                return -v
+
+            @jax.jit
+            def prog(x):
+                return pick(x)
+        """,
+    })
+    findings = _flow_findings(p)
+    assert {f.code for f in findings} == {"REP009"}
+    assert any("control flow" in f.message for f in findings)
+
+
+def test_rep009_quiet_on_static_shape_reads_and_is_none_split(tmp_path):
+    p = _project(tmp_path, {
+        "src/repro/core/k.py": """
+            import jax
+            import jax.numpy as jnp
+
+            def helper(q, reprs):
+                h, s, d = q.shape       # shapes are static inside a trace
+                assert s % 2 == 0
+                if reprs is None:       # the sanctioned static split
+                    return q * 2
+                if q.ndim == 3:
+                    return q
+                return q * jnp.float32(h)
+
+            @jax.jit
+            def prog(q, reprs):
+                return helper(q, reprs)
+        """,
+    })
+    assert _flow_findings(p) == []
+
+
+def test_planted_bugs_fire_exactly_their_rule(tmp_path):
+    """One tree holding all three planted bugs: each must fire exactly its
+    own rule — no cross-talk, no double counting."""
+    files = dict(ABBA)
+    files.update(_keyed(extra_field="mut_rate: float = 0.1",
+                        extra_read="* cfg.mut_rate"))
+    files["src/repro/core/t.py"] = """
+        import jax
+
+        @jax.jit
+        def prog(x, n):
+            return x * n
+
+        def driver(data, x):
+            n = len(data)
+            return prog(x, n)
+    """
+    findings = _flow_findings(_project(tmp_path, files))
+    by_code = {}
+    for f in findings:
+        by_code.setdefault(f.code, []).append(f)
+    assert set(by_code) == {"REP007", "REP008", "REP009"}
+    assert [f.path for f in by_code["REP007"]] == [
+        "src/repro/core/locks.py"] * len(by_code["REP007"])
+    assert all(f.path == "src/repro/core/engine.py"
+               for f in by_code["REP008"])
+    assert all(f.path == "src/repro/core/t.py"
+               for f in by_code["REP009"])
